@@ -1,0 +1,31 @@
+"""Shared benchmark helpers: timing, CSV rows."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_jit(fn: Callable, *args, repeat: int = 3, **kw) -> float:
+    """Median wall time (us) of a jitted call, post-warmup."""
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def row(name: str, us: float, derived: str = "") -> tuple[str, float, str]:
+    return (name, us, derived)
+
+
+def print_rows(rows) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,192 @@
+"""Roofline analysis over the dry-run artifacts (deliverable g).
+
+Reads results/dryrun/*.json and derives, per (arch x shape x mesh):
+
+  t_comp = probe_FLOPs / chips / 197e12        [unrolled-probe HLO FLOPs]
+  t_mem  = analytic HBM bytes per chip / 819e9 [traffic model below]
+  t_coll = per-device collective bytes / 50e9  [compiled HLO, trip-scaled;
+                                                all-reduce counted 2x]
+
+plus MODEL_FLOPS = 6*N(_active)*tokens (train) or 2*N*tokens (inference),
+the MODEL/HLO ratio (remat & overhead visibility), the dominant term, and a
+one-line "what would move it".
+
+Accounting notes (verified in launch/dryrun.py):
+  * compiled cost_analysis counts while bodies ONCE -> we use the unrolled
+    probe for FLOPs and trip-scale the collective parse;
+  * probe FLOPs are global (unsharded lowering) -> divide by chips;
+  * sLSTM's time scan cannot be unrolled; its per-step recurrence FLOPs are
+    added analytically (xlstm only);
+  * the memory model is analytic because XLA-CPU 'bytes accessed' reflects
+    CPU fusion, not TPU HBM traffic.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs.base import ALL_SHAPES
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_BF16_FLOPS
+from repro.models import cache as cache_mod
+from repro.models import registry as R
+from repro.models import transformer as T
+
+RESULTS_DIR = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+SHAPES = {s.name: s for s in ALL_SHAPES}
+
+
+def analytic_hbm_bytes(cfg, shape, devices: int, micro_batches: int) -> float:
+    """Per-chip HBM traffic (bytes) for one step — napkin model.
+
+    train:   params f32 read twice per microbatch (fwd+bwd) + grad
+             accumulate r/w per microbatch + optimizer (read g,m,v,p; write
+             m,v,p) + remat'd layer inputs (write+read, bf16) + logits r/w.
+    prefill: params once + layer activations once + cache write.
+    decode:  params once + full KV cache read + tiny writes.
+
+    MoE: only active experts' weights stream per token block — scaled by
+    top_k/num_experts (+ shared).
+    """
+    shape_obj = SHAPES[shape] if isinstance(shape, str) else shape
+    b, s = shape_obj.global_batch, shape_obj.seq_len
+    n_params = T.param_count(cfg)
+    n_active = T.active_param_count(cfg)
+    p_local = n_params * 4 / devices            # f32 shards
+    a_local = n_active * 4 / devices
+    tokens_local = b * s / devices
+    dt_act = 2                                   # bf16 activations
+
+    if shape_obj.kind == "train":
+        mb = max(1, micro_batches)
+        param_traffic = 2 * a_local * mb + 2 * p_local * mb + 7 * p_local
+        act_traffic = (2 * tokens_local * cfg.d_model * dt_act
+                       * cfg.n_layers)           # remat checkpoints r+w
+        logits_traffic = 2 * tokens_local * 4 * cfg.vocab / 16  # vocab/model
+        return param_traffic + act_traffic + logits_traffic
+    if shape_obj.kind == "prefill":
+        act = tokens_local * cfg.d_model * dt_act * cfg.n_layers
+        cache_w = cache_mod.cache_bytes(cfg, b, s) / devices
+        return a_local + act + cache_w
+    # decode: one token
+    cache_rw = cache_mod.cache_bytes(cfg, b, s) / devices
+    return a_local + cache_rw
+
+
+def slstm_correction(cfg, shape_obj, kind: str) -> float:
+    """Analytic FLOPs for the sLSTM recurrence the probe can't unroll."""
+    if cfg.name != "xlstm-350m":
+        return 0.0
+    n_slstm = sum(1 for sp in cfg.layer_specs() if sp.mixer == "slstm")
+    d = cfg.d_model
+    hd = d // cfg.n_heads
+    per_tok = 2 * cfg.n_heads * hd * (4 * hd)   # block-diag recurrence
+    tokens = shape_obj.global_batch * (shape_obj.seq_len
+                                       if kind != "decode" else 1)
+    mult = 3 if kind == "train" else 1          # fwd+bwd
+    return n_slstm * per_tok * tokens * mult
+
+
+def model_flops(cfg, shape_obj, kind: str) -> float:
+    n_active = T.active_param_count(cfg)
+    if kind == "train":
+        return 6.0 * n_active * shape_obj.global_batch * shape_obj.seq_len
+    if kind == "prefill":
+        return 2.0 * n_active * shape_obj.global_batch * shape_obj.seq_len
+    return 2.0 * n_active * shape_obj.global_batch  # decode: 1 token
+
+
+def analyze_cell(path: Path) -> dict:
+    d = json.loads(path.read_text())
+    cfg = R.get_arch(d["arch"])
+    shape_obj = SHAPES[d["shape"]]
+    kind = d["kind"]
+    chips = d["devices"]
+
+    probe_flops = (d.get("probe") or {}).get("global_flops")
+    if probe_flops is None:
+        probe_flops = (d.get("flops") or 0) * chips  # degraded fallback
+    probe_flops += slstm_correction(cfg, shape_obj, kind)
+
+    t_comp = probe_flops / chips / PEAK_BF16_FLOPS
+    hbm = analytic_hbm_bytes(cfg, d["shape"], chips, d.get("micro_batches", 1))
+    t_mem = hbm / HBM_BW
+    coll = d["collective_bytes"]
+    wire = (coll.get("all-gather", 0) + 2 * coll.get("all-reduce", 0)
+            + coll.get("reduce-scatter", 0) + coll.get("all-to-all", 0)
+            + coll.get("collective-permute", 0))
+    t_coll = wire / ICI_BW
+
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    t_bound = max(terms.values())
+    mf = model_flops(cfg, shape_obj, kind)
+    step_mfu = mf / chips / max(t_bound, 1e-30) / PEAK_BF16_FLOPS
+
+    hints = {
+        "compute": "reduce non-model FLOPs (remat policy, fused attention)",
+        "memory": "cut HBM traffic: lower-precision cache/params, larger "
+                  "microbatch, fuse remat reads",
+        "collective": "reshard to cut all-gathers/all-reduces (vocab-sharded "
+                      "CE, 2D logits, sketched DP reduce)",
+    }
+    return {
+        "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+        "kind": kind, "micro_batches": d.get("micro_batches"),
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dominant,
+        "hlo_flops_global": probe_flops,
+        "model_flops": mf,
+        "model_over_hlo": mf / max(probe_flops, 1e-30),
+        "roofline_mfu": step_mfu,
+        "hbm_bytes_per_chip": hbm,
+        "collective_wire_bytes_per_chip": wire,
+        "hint": hints[dominant],
+        "compile_s": d.get("compile_s"),
+        "memory_analysis": d.get("memory"),
+    }
+
+
+def full_table(mesh: str = "16x16", results_dir=None) -> list[dict]:
+    out = []
+    for p in sorted((results_dir or RESULTS_DIR).glob(f"*__{mesh}.json")):
+        out.append(analyze_cell(p))
+    return out
+
+
+def format_table(rows: list[dict]) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'t_comp':>9s} {'t_mem':>9s} "
+           f"{'t_coll':>9s} {'dom':>10s} {'MFU':>6s} {'M/H':>5s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} "
+            f"{r['t_compute_s']:9.2e} {r['t_memory_s']:9.2e} "
+            f"{r['t_collective_s']:9.2e} {r['dominant']:>10s} "
+            f"{r['roofline_mfu']*100:5.1f}% {r['model_over_hlo']:5.2f}")
+    return "\n".join(lines)
+
+
+def run() -> list:
+    rows_out = []
+    variants = [("baseline", RESULTS_DIR),
+                ("optimized", RESULTS_DIR.parent / "dryrun_opt")]
+    for tag, d in variants:
+        if not d.exists():
+            continue
+        for r in full_table(results_dir=d):
+            rows_out.append((
+                f"roofline.{tag}.{r['arch']}.{r['shape']}",
+                max(r['t_compute_s'], r['t_memory_s'],
+                    r['t_collective_s']) * 1e6,
+                f"dom={r['dominant']};mfu={r['roofline_mfu']*100:.1f}%;"
+                f"model/hlo={r['model_over_hlo']:.2f}"))
+    return rows_out
+
+
+if __name__ == "__main__":
+    import sys
+    d = Path(sys.argv[1]) if len(sys.argv) > 1 else RESULTS_DIR
+    rows = full_table(results_dir=d)
+    print(f"# roofline table from {d}")
+    print(format_table(rows))

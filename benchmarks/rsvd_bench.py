@@ -1,0 +1,115 @@
+"""Paper Fig. 7 (Randomized SVD accuracy) and Fig. 8 (time breakdown).
+
+Fig. 7: relative residual of rank-p RSVD across GEMM methods for the four
+test-matrix families (A_linear, A_exp, A_poly, A_cauchy), with the
+Eckart-Young bound where available.
+
+Fig. 8: per-stage wall time (projection / QR / B=Q^T A / tSVD / back-proj)
+measured on XLA-CPU, plus the derived TPU model: fraction of time in the
+projection GEMM x paper speedup -> end-to-end speedup prediction (the
+paper's 1.28x claim shape).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_jit
+from repro.core import projection as proj
+from repro.core import rsvd as rsvd_mod
+
+
+def _matrices(n=1024, p=64, s_p=1e-4):
+    key = jax.random.PRNGKey(0)
+    return {
+        "linear": (rsvd_mod.matrix_with_singular_values(
+            key, n, rsvd_mod.singular_values_linear(n, p, s_p)),
+            float(s_p * np.sqrt(n - p))),
+        "exp": (rsvd_mod.matrix_with_singular_values(
+            jax.random.fold_in(key, 1), n,
+            rsvd_mod.singular_values_exp(n, p, s_p)), None),
+        "poly": (rsvd_mod.matrix_type2(jax.random.fold_in(key, 2), n=n,
+                                       r=20), None),
+        "cauchy": (rsvd_mod.matrix_cauchy(jax.random.fold_in(key, 3), n=n),
+                   None),
+    }
+
+
+def fig7_accuracy(n=1024, p=64) -> list:
+    rows = []
+    mats = _matrices(n, p)
+    for mname, (a, bound) in mats.items():
+        base = None
+        for method in ("f32", "lowp_single", "shgemm", "shgemm3",
+                       "shgemm_pallas"):
+            errs = []
+            for seed in range(3):
+                res = rsvd_mod.rsvd(jax.random.PRNGKey(10 + seed), a, p,
+                                    method=method)
+                errs.append(float(rsvd_mod.reconstruction_error(a, res)))
+            err = float(np.mean(errs))
+            if method == "f32":
+                base = err
+            extra = f";vs_f32={err/base:.2f}x" if base else ""
+            bstr = f";ey_bound={bound:.2e}" if bound else ""
+            rows.append(row(f"fig7.{mname}.{method}", 0.0,
+                            f"rel_err={err:.4e}{extra}{bstr}"))
+    return rows
+
+
+def fig8_breakdown(n=2048, p=128) -> list:
+    """Stage-by-stage timing; derived = predicted TPU end-to-end speedup."""
+    rows = []
+    key = jax.random.PRNGKey(5)
+    a = rsvd_mod.matrix_with_singular_values(
+        key, n, rsvd_mod.singular_values_exp(n, p, 1e-4))
+    p_hat = p + 10
+    omega32 = proj.gaussian(jax.random.PRNGKey(6), (n, p_hat), jnp.float32)
+    omega16 = omega32.astype(jnp.bfloat16)
+
+    # NB: operands must be ARGUMENTS — jitted closures constant-fold
+    proj_f32 = jax.jit(lambda a, o: proj.project(a, o, method="f32"))
+    proj_sh = jax.jit(lambda a, o: proj.project(a, o, method="shgemm"))
+    y = proj_f32(a, omega32)
+    qr_fn = jax.jit(lambda y: jnp.linalg.qr(y)[0])
+    q = qr_fn(y)
+    bt_fn = jax.jit(lambda q, a: q.T @ a)
+    b = bt_fn(q, a)
+    svd_fn = jax.jit(lambda b: jnp.linalg.svd(b, full_matrices=False))
+    u_b, _, _ = svd_fn(b)
+    back_fn = jax.jit(lambda q, u: q @ u)
+
+    t = {
+        "1_projection_f32": time_jit(proj_f32, a, omega32),
+        "1_projection_shgemm": time_jit(proj_sh, a, omega16),
+        "2_qr": time_jit(qr_fn, y),
+        "3_btqa": time_jit(bt_fn, q, a),
+        "4_tsvd": time_jit(svd_fn, b),
+        "5_backproj": time_jit(back_fn, q, u_b),
+    }
+    total_f32 = (t["1_projection_f32"] + t["2_qr"] + t["3_btqa"]
+                 + t["4_tsvd"] + t["5_backproj"])
+    for name, us in t.items():
+        rows.append(row(f"fig8.stage.{name}", us,
+                        f"frac={us/total_f32:.3f}"))
+
+    # derived TPU prediction: projection is proj_frac of the total; SHGEMM
+    # cuts the projection (and B=Q^T A stays f32) by 3x (6-pass -> 2-pass)
+    proj_frac = t["1_projection_f32"] / total_f32
+    for speed in (1.5, 3.0):
+        e2e = 1.0 / (1 - proj_frac + proj_frac / speed)
+        rows.append(row(f"fig8.model.proj_speedup_{speed}x", 0.0,
+                        f"proj_frac={proj_frac:.2f};e2e_speedup={e2e:.3f}x"))
+    # measured-on-CPU end-to-end ratio for reference
+    cpu_total_sh = total_f32 - t["1_projection_f32"] + t["1_projection_shgemm"]
+    rows.append(row("fig8.cpu_e2e", total_f32,
+                    f"cpu_speedup={total_f32/cpu_total_sh:.3f}x"))
+    return rows
+
+
+def run() -> list:
+    return fig7_accuracy() + fig8_breakdown()

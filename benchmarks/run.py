@@ -1,0 +1,41 @@
+"""Benchmark driver — one section per paper table/figure plus the framework
+integration and roofline suites.  Prints ``name,us_per_call,derived`` CSV."""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    import jax
+    jax.config.update("jax_platform_name", "cpu")
+
+    from benchmarks import (hosvd_bench, integration_bench, paper_tables,
+                            roofline, rsvd_bench, shgemm_bench)
+    from benchmarks.common import print_rows
+
+    suites = [
+        ("paper_tables", paper_tables.run),      # Table 1, Fig 2, Fig 3
+        ("shgemm", shgemm_bench.run),            # Fig 5, Fig 6, blocks
+        ("rsvd", rsvd_bench.run),                # Fig 7, Fig 8
+        ("hosvd", hosvd_bench.run),              # Fig 9
+        ("integration", integration_bench.run),  # galore/compression/kv/e2e
+        ("roofline", roofline.run),              # dry-run derived table
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for name, fn in suites:
+        if only and only != name:
+            continue
+        t0 = time.time()
+        try:
+            print_rows(fn())
+            print(f"# suite {name} done in {time.time()-t0:.1f}s",
+                  file=sys.stderr)
+        except Exception as e:  # keep the harness honest but resilient
+            print(f"{name}.SUITE_FAILED,0,{e!r}")
+
+
+if __name__ == "__main__":
+    main()

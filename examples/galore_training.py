@@ -1,0 +1,72 @@
+"""GaLore-RSVD vs AdamW: the paper's technique as an optimizer feature.
+
+Trains the same smoke LM twice and reports loss curves + optimizer-state
+memory — the mixed-precision RSVD range finder (core/rsvd.py) runs inside
+the GaLore update to refresh the low-rank gradient subspace.
+
+    PYTHONPATH=src python examples/galore_training.py --steps 40
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import smoke_config
+from repro.data.pipeline import SyntheticLM
+from repro.models import registry as R
+from repro.models import transformer as T
+from repro.optim import galore
+from repro.optim.optimizers import adamw
+
+
+def run(cfg, params, data, tx, steps):
+    state = tx.init(params)
+
+    @jax.jit
+    def step(p, s, batch):
+        def loss(p):
+            return T.loss_fn(cfg, p, batch)
+        l, g = jax.value_and_grad(loss)(p)
+        upd, s = tx.update(g, s, p)
+        return jax.tree.map(jnp.add, p, upd), s, l
+
+    losses = []
+    p = params
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+        p, state, l = step(p, state, batch)
+        losses.append(float(l))
+    return losses, state
+
+
+def state_bytes(state):
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(state)
+               if hasattr(x, "size"))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--rank", type=int, default=16)
+    args = ap.parse_args()
+
+    # widen the smoke model so 2-D weights qualify for projection
+    cfg = smoke_config(R.get_arch("qwen3-0.6b")).with_(d_model=128, d_ff=256)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=64, global_batch=8)
+
+    for name, tx in [
+        ("adamw", adamw(3e-3)),
+        (f"galore(r={args.rank})", galore.galore(3e-3, rank=args.rank,
+                                                 refresh_every=10)),
+    ]:
+        losses, state = run(cfg, params, data, tx, args.steps)
+        print(f"{name:16s} loss {losses[0]:.3f} -> {losses[-1]:.3f}   "
+              f"opt-state {state_bytes(state)/1e6:.2f} MB")
+    print("(GaLore keeps Adam moments in the rank-r subspace refreshed by")
+    print(" the paper's mixed-precision RSVD range finder)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""RP-HOSVD tensor compression demo (paper Algorithm 2 end-to-end).
+
+Builds a structured 3-way tensor (low multilinear rank + noise), compresses
+it with mixed-precision random-projection HOSVD, and reports compression
+ratio vs reconstruction error for several ranks.
+
+    PYTHONPATH=src python examples/hosvd_compression.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hosvd
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    dims = (96, 80, 64)
+    true_rank = (12, 12, 12)
+    t = hosvd.make_test_tensor(key, dims, true_rank)
+    t = t + 1e-4 * jax.random.normal(jax.random.fold_in(key, 9), t.shape)
+    full = t.size
+
+    print(f"tensor {dims}, true multilinear rank ~{true_rank}")
+    for r in (6, 10, 12, 16, 24):
+        ranks = (r, r, r)
+        res = hosvd.rp_hosvd(jax.random.PRNGKey(1), t, ranks, method="shgemm")
+        err = float(hosvd.reconstruction_error(t, res))
+        stored = res.core.size + sum(q.size for q in res.factors)
+        print(f"  rank {r:3d}: compression {full/stored:6.1f}x  "
+              f"rel_err {err:.3e}")
+    print("(rank >= true rank recovers the tensor to the noise floor; the")
+    print(" bf16 random projection costs no accuracy — paper Fig. 9)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.configs import archs, base

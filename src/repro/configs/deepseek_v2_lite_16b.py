@@ -1,0 +1,8 @@
+"""Config module for --arch deepseek-v2-lite-16b (canonical definition in archs.py)."""
+
+from repro.configs.archs import ARCHS
+from repro.configs.base import ModelCfg, shapes_for, smoke_config
+
+CONFIG: ModelCfg = ARCHS["deepseek-v2-lite-16b"]
+SHAPES = shapes_for(CONFIG)
+SMOKE: ModelCfg = smoke_config(CONFIG)

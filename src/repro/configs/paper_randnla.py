@@ -1,0 +1,40 @@
+"""The paper's own experiment configurations (§3.3, §5.1, §5.2)."""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class RSVDExperiment:
+    n: int = 4096          # matrix size (paper §5.1.1)
+    rank: int = 256        # target rank p
+    oversample: int = 10   # s (fixed in §5.1)
+    power_iters: int = 0
+    s_p: float = 1e-4      # smallest prescribed singular value
+    seeds: int = 10        # matrices per family
+
+
+@dataclasses.dataclass(frozen=True)
+class HOSVDExperiment:
+    dims: tuple = (256, 256, 256)
+    ranks: tuple = (32, 32, 32)
+    pad: int = 2           # Algorithm 3 rank padding
+
+
+@dataclasses.dataclass(frozen=True)
+class Fig3Experiment:
+    n: int = 4096
+    r: int = 20
+    xi: float = 1e-4       # type-1 noise
+    alpha: float = 3.0     # type-2 spectrum decay
+    phi: float = 1e6
+    mantissa_bits: tuple = (2, 3, 5, 7, 10, 23)
+
+
+PAPER_RSVD = RSVDExperiment()
+PAPER_HOSVD = HOSVDExperiment()
+PAPER_FIG3 = Fig3Experiment()
+
+# CPU-sized variants used by benchmarks/ (structure identical, dims reduced)
+BENCH_RSVD = dataclasses.replace(RSVDExperiment(), n=1024, rank=64, seeds=3)
+BENCH_HOSVD = dataclasses.replace(HOSVDExperiment(), dims=(96, 96, 96),
+                                  ranks=(24, 24, 24))

@@ -1,0 +1,13 @@
+"""Core library: the paper's contribution (mixed-precision random projection
+for RandNLA) as composable JAX modules."""
+
+from repro.core import gaussian, hosvd, lstsq, projection, rsvd, splitting
+from repro.core.projection import gaussian as gaussian_matrix
+from repro.core.projection import project
+from repro.core.rsvd import rsvd as randomized_svd
+from repro.core.hosvd import rp_hosvd
+
+__all__ = [
+    "gaussian", "hosvd", "lstsq", "projection", "rsvd", "splitting",
+    "gaussian_matrix", "project", "randomized_svd", "rp_hosvd",
+]

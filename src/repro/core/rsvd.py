@@ -1,0 +1,182 @@
+"""Randomized SVD (paper Algorithm 1) with mixed-precision random projection.
+
+The random projection (line 1, the O(mnp) term) is the paper's optimization
+target; QR (line 2), B = Q^T A (line 3), tSVD (line 4) and the back-projection
+(line 5) run in f32 (the cuSOLVER role is played by jnp.linalg).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import projection as proj
+
+
+class SVDResult(NamedTuple):
+    u: jax.Array      # (m, rank)
+    s: jax.Array      # (rank,)
+    vt: jax.Array     # (rank, n)
+
+
+def _dot(a, b):
+    return jnp.dot(a, b, precision=jax.lax.Precision.HIGHEST,
+                   preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("rank", "oversample", "power_iters", "method", "omega_dtype"),
+)
+def rsvd(key: jax.Array, a: jax.Array, rank: int, *, oversample: int = 10,
+         power_iters: int = 0, method: proj.ProjectionMethod = "shgemm",
+         omega_dtype=jnp.bfloat16) -> SVDResult:
+    """p-rank randomized SVD of ``a`` (paper Algorithm 1).
+
+    oversample: the paper's s (they fix s=10 in §5.1); the sketch width is
+    p_hat = rank + oversample.
+    power_iters: q power iterations (A A^T)^q A Omega for slowly decaying
+    spectra (§2.1); the extra passes run in f32.
+    """
+    m, n = a.shape
+    p_hat = min(rank + oversample, min(m, n))
+    omega = proj.gaussian(key, (n, p_hat), dtype=omega_dtype)
+
+    # Line 1: Y = A . Omega — THE mixed-precision projection.
+    y = proj.project(a, omega, method=method)
+
+    # Power scheme: re-orthonormalize between passes for stability.
+    for _ in range(power_iters):
+        q, _ = jnp.linalg.qr(y)
+        z = _dot(a.T, q)
+        q, _ = jnp.linalg.qr(z)
+        y = _dot(a, q)
+
+    # Line 2: thin QR.
+    q, _ = jnp.linalg.qr(y)
+    # Line 3: B = Q^T A  (p_hat x n).
+    b = _dot(q.T, a)
+    # Line 4: tSVD of the small matrix.
+    u_b, s, vt = jnp.linalg.svd(b, full_matrices=False)
+    # Line 5: U = Q . U'.
+    u = _dot(q, u_b)
+    return SVDResult(u[:, :rank], s[:rank], vt[:rank, :])
+
+
+@functools.partial(jax.jit, static_argnames=("rank", "oversample", "method",
+                                             "omega_dtype"))
+def range_finder(key: jax.Array, a: jax.Array, rank: int, *, oversample: int = 10,
+                 method: proj.ProjectionMethod = "shgemm",
+                 omega_dtype=jnp.bfloat16) -> jax.Array:
+    """Return Q with orthonormal columns s.t. A ~ Q Q^T A (Eq. 3)."""
+    m, n = a.shape
+    p_hat = min(rank + oversample, min(m, n))
+    omega = proj.gaussian(key, (n, p_hat), dtype=omega_dtype)
+    y = proj.project(a, omega, method=method)
+    q, _ = jnp.linalg.qr(y)
+    return q
+
+
+def projection_error(a: jax.Array, q: jax.Array) -> jax.Array:
+    """||A - Q Q^T A||_F — the Fig. 3 / Eq. 4 quantity."""
+    a = a.astype(jnp.float32)
+    resid = a - _dot(q, _dot(q.T, a))
+    return jnp.linalg.norm(resid)
+
+
+def reconstruction_error(a: jax.Array, res: SVDResult) -> jax.Array:
+    """Relative residual ||A - U S V^T||_F / ||A||_F (Fig. 7 metric)."""
+    a = a.astype(jnp.float32)
+    approx = _dot(res.u * res.s[None, :], res.vt)
+    return jnp.linalg.norm(a - approx) / jnp.linalg.norm(a)
+
+
+def halko_bound(s_tail_norm: jax.Array, rank: int, oversample: int) -> jax.Array:
+    """Expected-error bound Eq. (4): sqrt(1 + p/(s-1)) * ||Sigma_2||_F."""
+    return jnp.sqrt(1.0 + rank / (oversample - 1.0)) * s_tail_norm
+
+
+@functools.partial(jax.jit, static_argnames=("rank", "oversample", "method",
+                                             "omega_dtype"))
+def nystrom_eigh(key: jax.Array, a: jax.Array, rank: int, *,
+                 oversample: int = 10, method: proj.ProjectionMethod = "shgemm",
+                 omega_dtype=jnp.bfloat16) -> tuple[jax.Array, jax.Array]:
+    """Randomized Nystrom eigendecomposition of a PSD matrix (RandNLA
+    family extension; Halko et al. §5.4 / Tropp et al. 2017).
+
+    A ~ U diag(lam) U^T with a single mixed-precision projection pass:
+      Y = A Omega  (the paper's hot GEMM), nu-shifted for stability,
+      C = chol(Omega^T Y), B = Y C^-T, SVD(B) -> U, lam = sig^2 - nu.
+    """
+    n = a.shape[0]
+    p_hat = min(rank + oversample, n)
+    omega = proj.gaussian(key, (n, p_hat), dtype=omega_dtype)
+    y = proj.project(a, omega, method=method)             # (n, p_hat)
+    nu = jnp.sqrt(jnp.asarray(n, jnp.float32)) * 1e-6 * jnp.linalg.norm(y)
+    y = y + nu * omega.astype(jnp.float32)
+    g = _dot(omega.astype(jnp.float32).T, y)
+    g = 0.5 * (g + g.T)                                   # symmetrize
+    c = jnp.linalg.cholesky(g)
+    b = jax.scipy.linalg.solve_triangular(c, y.T, lower=True).T
+    u, sig, _ = jnp.linalg.svd(b, full_matrices=False)
+    lam = jnp.maximum(sig**2 - nu, 0.0)
+    return u[:, :rank], lam[:rank]
+
+
+# ---------------------------------------------------------------------------
+# Test-matrix generators (paper §5.1.1 and §3.3)
+# ---------------------------------------------------------------------------
+
+def matrix_with_singular_values(key: jax.Array, n: int, s_vals: jax.Array) -> jax.Array:
+    """Random n x n matrix with prescribed singular values (slatms role):
+    U diag(s) V^T with Haar-ish U, V from QR of Gaussians."""
+    k1, k2 = jax.random.split(key)
+    u, _ = jnp.linalg.qr(jax.random.normal(k1, (n, n), dtype=jnp.float32))
+    v, _ = jnp.linalg.qr(jax.random.normal(k2, (n, n), dtype=jnp.float32))
+    return _dot(u * s_vals[None, :], v.T)
+
+
+def singular_values_linear(n: int, p: int, s_p: float) -> jax.Array:
+    """A_linear spectrum: s_i = max(-alpha_l * i + 1, s_p), alpha_l=(1-s_p)/p."""
+    i = jnp.arange(n, dtype=jnp.float32)
+    alpha = (1.0 - s_p) / p
+    return jnp.maximum(-alpha * i + 1.0, s_p)
+
+
+def singular_values_exp(n: int, p: int, s_p: float) -> jax.Array:
+    """A_exp spectrum: s_i = 2^(-alpha_e * i), alpha_e = log2(1/s_p)/p."""
+    i = jnp.arange(n, dtype=jnp.float32)
+    alpha = jnp.log2(1.0 / s_p) / p
+    return jnp.exp2(-alpha * i)
+
+
+def matrix_type1(key: jax.Array, n: int = 4096, r: int = 20,
+                 xi: float = 1e-4) -> jax.Array:
+    """§3.3 Type 1: D + xi * G G^T with D = diag(I_r, 0)."""
+    g = jax.random.normal(key, (n, n), dtype=jnp.float32)
+    d = jnp.diag(jnp.concatenate([jnp.ones(r), jnp.zeros(n - r)]).astype(jnp.float32))
+    return d + xi * _dot(g, g.T) / n  # /n keeps the noise term O(xi)
+
+
+def matrix_type2(key: jax.Array, n: int = 4096, r: int = 20, alpha: float = 3.0,
+                 phi: float = 1e6) -> jax.Array:
+    """§3.3 Type 2 (= A_poly): U diag(phi*I_r, 2^-a, 3^-a, ...) V^T, Haar U,V."""
+    head = jnp.full((r,), phi, dtype=jnp.float32)
+    tail = jnp.arange(2, n - r + 2, dtype=jnp.float32) ** (-alpha)
+    return matrix_with_singular_values(key, n, jnp.concatenate([head, tail]))
+
+
+def matrix_cauchy(key: jax.Array, n: int = 4096, gamma: float = 1e-3) -> jax.Array:
+    """§5.1.1 Cauchy matrix: 1/(|x_i - y_j| + gamma), x,y ~ U(-1e-3, 1e-3).
+
+    Elements reach ~1/gamma = 1000 > fp16's safe range after accumulation; on
+    the paper's fp16 path this overflows — on our bf16 path it does not
+    (hardware-adaptation win, DESIGN.md §2).
+    """
+    kx, ky = jax.random.split(key)
+    x = jax.random.uniform(kx, (n, 1), minval=-1e-3, maxval=1e-3)
+    y = jax.random.uniform(ky, (1, n), minval=-1e-3, maxval=1e-3)
+    return (1.0 / (jnp.abs(x - y) + gamma)).astype(jnp.float32)

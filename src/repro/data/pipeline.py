@@ -1,0 +1,75 @@
+"""Deterministic, restartable data pipeline.
+
+Sources:
+  * ``SyntheticLM`` — seeded zipfian token stream (benchmarks/examples; no
+    dataset gate in this container).
+  * ``MemmapTokens`` — flat binary token file via np.memmap (production
+    path: one file per host shard).
+
+Determinism/fault-tolerance contract: batch(step) is a pure function of
+(seed, step, host_id), so restoring a checkpoint at step N and continuing
+yields the identical stream — no iterator state to snapshot.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    host_id: int = 0
+    num_hosts: int = 1
+    zipf_a: float = 1.2
+
+    @property
+    def host_batch(self) -> int:
+        assert self.global_batch % self.num_hosts == 0
+        return self.global_batch // self.num_hosts
+
+    def batch(self, step: int) -> dict[str, np.ndarray]:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, self.host_id]))
+        # zipf over a capped support, shifted into [0, vocab)
+        raw = rng.zipf(self.zipf_a, size=(self.host_batch, self.seq_len + 1))
+        toks = (raw - 1) % self.vocab
+        return {"tokens": toks[:, :-1].astype(np.int32),
+                "labels": toks[:, 1:].astype(np.int32)}
+
+
+@dataclasses.dataclass
+class MemmapTokens:
+    path: str | Path
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    host_id: int = 0
+    num_hosts: int = 1
+
+    def __post_init__(self):
+        self._data = np.memmap(self.path, dtype=np.int32, mode="r")
+        self._n_windows = (len(self._data) - 1) // self.seq_len
+
+    @property
+    def host_batch(self) -> int:
+        return self.global_batch // self.num_hosts
+
+    def batch(self, step: int) -> dict[str, np.ndarray]:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, self.host_id]))
+        idx = rng.integers(0, self._n_windows, size=self.host_batch)
+        starts = idx * self.seq_len
+        toks = np.stack([self._data[s:s + self.seq_len + 1] for s in starts])
+        return {"tokens": toks[:, :-1].astype(np.int32),
+                "labels": toks[:, 1:].astype(np.int32)}
+
+
+def write_token_file(path: str | Path, tokens: np.ndarray) -> None:
+    np.asarray(tokens, np.int32).tofile(path)

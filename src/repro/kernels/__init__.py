@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the performance-critical GEMMs.
+
+shgemm.py — pl.pallas_call split-precision GEMM (the paper's §4 kernel,
+            TPU-adapted); ops.py — public jit wrappers; ref.py — pure-jnp
+            oracles used by the allclose tests.
+"""
+
+from repro.kernels import ops, ref, shgemm

@@ -1,0 +1,100 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``shgemm(a, b)`` handles arbitrary shapes/dtypes: pads to block multiples,
+dispatches to the Pallas kernel (interpret=True automatically on CPU), strips
+padding.  This is the drop-in used by core/projection.py's "shgemm_pallas"
+method and by the serving/optimizer layers.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import shgemm as _k
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, m0: int, m1: int) -> jax.Array:
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def _pick_blocks(m: int, n: int, k: int) -> tuple[int, int, int]:
+    """Shrink default blocks for small problems (still 128-aligned where the
+    dims allow; tiny dims fall back to the dim itself rounded to 8/128)."""
+    def shrink(dim, default, align):
+        if dim >= default:
+            return default
+        # round dim up to alignment, at most default
+        return min(default, max(align, ((dim + align - 1) // align) * align))
+    bm = shrink(m, _k.DEFAULT_BM, 8)
+    bn = shrink(n, _k.DEFAULT_BN, 128)
+    bk = shrink(k, _k.DEFAULT_BK, 128)
+    return bm, bn, bk
+
+
+@functools.partial(jax.jit, static_argnames=("blocks", "terms", "interpret"))
+def shgemm(a: jax.Array, b: jax.Array, *, blocks: tuple[int, int, int] | None = None,
+           terms: int = 2, interpret: bool | None = None) -> jax.Array:
+    """C_f32 = A_f32 @ B_lowp for arbitrary shapes.
+
+    B may be bf16 (TPU-native) or fp16 (paper-faithful path).  A is cast to
+    f32 if needed.  On non-TPU backends the kernel runs in interpret mode
+    (Python evaluation of the kernel body) for bit-accurate validation.
+    """
+    a = a.astype(jnp.float32)
+    if b.dtype not in (jnp.bfloat16, jnp.float16):
+        b = b.astype(jnp.bfloat16)
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {a.shape} @ {b.shape}")
+    if interpret is None:
+        interpret = not _on_tpu()
+    bm, bn, bk = blocks if blocks is not None else _pick_blocks(m, n, k)
+    ap = _pad_to(a, bm, bk)
+    bp = _pad_to(b, bk, bn)
+    c = _k.shgemm_pallas(ap, bp, bm=bm, bn=bn, bk=bk, terms=terms,
+                         interpret=interpret)
+    return c[:m, :n]
+
+
+def shgemm_nt(a: jax.Array, b_t: jax.Array, **kw) -> jax.Array:
+    """C = A @ B_t^T (B stored transposed, e.g. row-major random matrices)."""
+    return shgemm(a, b_t.T, **kw)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale=None,
+                    interpret: bool | None = None):
+    """Padded/dispatching wrapper over kernels.flash_attention: pads S to a
+    block multiple (extra kv masked by the causal structure; for non-causal
+    the pad rows are sliced off and pad kv contribute exp(-inf)=0)."""
+    from repro.kernels import flash_attention as fa
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, s, h, hd = q.shape
+    block = 128 if s >= 128 else max(8, s)
+    pad = (-s) % block
+    if pad and not causal:
+        # padded kv columns would pollute a non-causal softmax; use the
+        # jnp oracle for ragged non-causal shapes (rare: encoder smoke)
+        from repro.kernels.ref import flash_attention_ref
+        return flash_attention_ref(q, k, v, causal=False, scale=scale)
+    if pad:
+        widths = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q = jnp.pad(q, widths)
+        k = jnp.pad(k, widths)
+        v = jnp.pad(v, widths)  # pad kv sit above the causal diagonal
+    out = fa.flash_attention(q, k, v, causal=causal, scale=scale,
+                             block_q=block, block_kv=block,
+                             interpret=interpret)
+    return out[:, :s]

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These define the semantics the kernels must match (assert_allclose in tests):
+plain XLA ops, no Pallas, no tiling.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.splitting import FP16_INV_SCALE, split_fp32, split_fp32_bf16_3
+
+
+def shgemm_ref(a_f32: jax.Array, b_lowp: jax.Array, terms: int = 2) -> jax.Array:
+    """C = A_f32 @ B_lowp via the split-term sum (paper Eq. 37-40).
+
+    Exactly the math the Pallas kernel implements: hi/lo(/mid) split of A,
+    one low-precision multiply per term, f32 accumulation.
+    """
+    a = a_f32.astype(jnp.float32)
+    if terms == 3:
+        if b_lowp.dtype == jnp.float16:
+            raise ValueError("terms=3 is bf16-only")
+        hi, mid, lo = split_fp32_bf16_3(a)
+        return (jnp.dot(hi, b_lowp, preferred_element_type=jnp.float32)
+                + jnp.dot(mid, b_lowp, preferred_element_type=jnp.float32)
+                + jnp.dot(lo, b_lowp, preferred_element_type=jnp.float32))
+    if terms == 1:
+        return jnp.dot(a.astype(b_lowp.dtype), b_lowp,
+                       preferred_element_type=jnp.float32)
+    fmt = "fp16" if b_lowp.dtype == jnp.float16 else "bf16"
+    hi, lo = split_fp32(a, fmt)
+    main = jnp.dot(hi, b_lowp, preferred_element_type=jnp.float32)
+    corr = jnp.dot(lo, b_lowp, preferred_element_type=jnp.float32)
+    if fmt == "fp16":
+        return main + corr * FP16_INV_SCALE
+    return main + corr
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        scale: float = None) -> jax.Array:
+    """Plain-jnp GQA attention oracle: q (B,S,H,hd), k/v (B,S,KV,hd)."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    if scale is None:
+        scale = hd ** -0.5
+    qg = q.reshape(b, s, kv, g, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h, hd).astype(q.dtype)
+
+
+def sgemm_f64_oracle(a: jax.Array, b: jax.Array) -> jax.Array:
+    """The accuracy oracle of paper Fig. 5: inputs widened to f64."""
+    with jax.experimental.enable_x64():
+        return jnp.dot(jnp.asarray(a, jnp.float64), jnp.asarray(b, jnp.float64))
+
+
+def relative_error_fro(c: jax.Array, c_ref: jax.Array) -> jax.Array:
+    """||C - C_ref||_F / ||C_ref||_F (paper's RelativeError metric)."""
+    c64 = jnp.asarray(c, jnp.float64) if c_ref.dtype == jnp.float64 else c
+    return jnp.linalg.norm(c64 - c_ref) / jnp.linalg.norm(c_ref)

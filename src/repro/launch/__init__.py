@@ -1,0 +1,1 @@
+# launch/ is imported lazily; dryrun.py must own its XLA_FLAGS lines.

@@ -1,0 +1,303 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST set the placeholder device count before ANY other import (jax locks the
+device count on first init).  Do not copy these lines anywhere global —
+smoke tests and benchmarks must see the real 1-device topology.
+"""
+
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+# ruff: noqa: E402
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ALL_SHAPES, shapes_for
+from repro.launch import mesh as mesh_mod
+from repro.models import registry as R
+from repro.models import transformer as T
+from repro.sharding import rules
+from repro.sharding import activation as act_sharding
+
+RESULTS_DIR = Path(os.environ.get(
+    "REPRO_DRYRUN_DIR",
+    Path(__file__).resolve().parents[3] / "results" / "dryrun"))
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COMP_HEAD_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->.*{")
+_WHILE_RE = re.compile(r"while\(.*?\), condition=%([\w\.\-]+), "
+                       r"body=%([\w\.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_COLL_RE = re.compile(
+    r"=\s*(.*?)\s*(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start|-done)?\(")
+
+
+def _shape_bytes(type_str: str) -> int:
+    nbytes = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        nbytes += n * _DTYPE_BYTES[dt]
+    return nbytes
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum result bytes of every collective op in the (per-device SPMD) HLO,
+    scaled by enclosing while-loop trip counts.
+
+    cost_analysis/as_text report while bodies ONCE (verified empirically), so
+    a per-layer collective inside the layer scan must be multiplied by
+    n_scan_periods (and by the microbatch trip count if doubly nested).
+    Trip counts come from the `s32[] constant(N)` bound in each loop's
+    condition computation.  All-reduce wire bytes are ~2x the result size
+    (ring RS+AG); the roofline model applies that factor downstream.
+    """
+    # 1. segment into computations
+    comps: dict[str, list[str]] = {}
+    current = None
+    for line in hlo_text.splitlines():
+        m = _COMP_HEAD_RE.match(line.strip())
+        if m:
+            current = m.group(1)
+            comps[current] = []
+        elif current is not None:
+            comps[current].append(line)
+
+    # 2. while ops: (containing comp, cond, body) + trip counts
+    body_of: dict[str, tuple[str, str]] = {}  # body comp -> (parent, cond)
+    for name, lines in comps.items():
+        for line in lines:
+            for cond, body in _WHILE_RE.findall(line):
+                body_of[body] = (name, cond)
+
+    def trip(cond_name: str) -> int:
+        consts = [int(c) for ln in comps.get(cond_name, ())
+                  for c in _CONST_RE.findall(ln)]
+        return max(consts) if consts else 1
+
+    def multiplier(comp: str, depth=0) -> int:
+        if depth > 8 or comp not in body_of:
+            return 1
+        parent, cond = body_of[comp]
+        return trip(cond) * multiplier(parent, depth + 1)
+
+    # 3. collectives per computation x multiplier
+    out = {k: 0 for k in _COLLECTIVES}
+    for name, lines in comps.items():
+        mult = multiplier(name)
+        for line in lines:
+            m = _COLL_RE.search(line)
+            if not m:
+                continue
+            result_str, kind, suffix = m.group(1), m.group(2), m.group(3)
+            if suffix == "-done":
+                continue  # async pair: count the -start only
+            out[kind] += _shape_bytes(result_str) * mult
+    return out
+
+
+def flops_probe(cfg, shape, micro_batches: int) -> dict:
+    """Lower (no compile) an UNROLLED, unsharded variant and read
+    lowered.cost_analysis() — the only way to see through scan bodies.
+    sLSTM's time scan stays rolled (4096-step unroll is intractable); its
+    FLOPs are corrected analytically in the roofline (EXPERIMENTS.md)."""
+    probe_cfg = cfg.with_(unroll_scans=True, attn_chunk=shape.seq_len)
+    if shape.kind == "train":
+        step = R.make_train_step(probe_cfg, micro_batches=1)
+        abs_params = T.abstract_params(probe_cfg)
+        abs_opt = jax.eval_shape(step.init_opt, abs_params)
+        specs = R.input_specs(probe_cfg, shape)
+        lowered = jax.jit(step).lower(abs_params, abs_opt, specs)
+    else:
+        step = (R.make_prefill_step(probe_cfg) if shape.kind == "prefill"
+                else R.make_serve_step(probe_cfg))
+        abs_params = T.abstract_params(probe_cfg)
+        specs = R.input_specs(probe_cfg, shape)
+        lowered = jax.jit(step).lower(abs_params, specs)
+    cost = lowered.cost_analysis() or {}
+    return {"global_flops": cost.get("flops"),
+            "note": "unrolled unsharded probe; micro_batches=1"}
+
+
+def pick_micro_batches(cfg, shape, mesh) -> int:
+    """Gradient-accumulation factor: keep remat'd activations (+ logits)
+    under ~4 GiB/device.  Non-TP (auto-layout) archs replicate compute, so
+    the whole per-device batch can ride in fewer, larger microbatches —
+    fewer parameter all-gather rounds (§Perf iteration 3)."""
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    per_dev = max(1, shape.global_batch // dp)
+    tp = 16 if rules.tp_enabled(cfg) else 1
+    act_bytes_per_seq = 2 * shape.seq_len * cfg.d_model * cfg.n_layers // tp
+    logit_bytes_per_seq = 4 * shape.seq_len * cfg.vocab // 16
+    per_seq = act_bytes_per_seq + logit_bytes_per_seq
+    # ~4 GiB activation budget: per-microbatch gradient psums sit inside the
+    # accumulation scan, so fewer/larger microbatches divide that wire volume
+    # (§Perf iteration 9); remat keeps the rest in check.
+    target = max(1, int(4e9 // max(per_seq, 1)))
+    want = max(1, -(-per_dev // target))  # ceil
+    # round up to a divisor of per_dev so microbatches split evenly
+    mb = next(m for m in range(want, per_dev + 1) if per_dev % m == 0)
+    return mb
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               micro_override=None):
+    cfg = R.get_arch(arch)
+    shape = {s.name: s for s in ALL_SHAPES}[shape_name]
+    mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    specs = R.input_specs(cfg, shape)
+
+    def ns(tree):  # PartitionSpec tree -> NamedSharding tree
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    raw_pspecs = rules.param_specs(cfg, mesh, serving=(shape.kind != "train"))
+    pspecs = ns(raw_pspecs)
+    bspecs = ns(rules.batch_specs(cfg, shape, mesh, specs))
+    abs_params = T.abstract_params(cfg)
+    # activation constraints active for lowering; TP per auto-layout
+    act_sharding.set_mesh(mesh, tp=rules.tp_enabled(cfg))
+    act_sharding.set_param_specs(raw_pspecs)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        mb = micro_override or pick_micro_batches(cfg, shape, mesh)
+        step = R.make_train_step(cfg, micro_batches=mb)
+        abs_opt = jax.eval_shape(step.init_opt, abs_params)
+        ospecs = ns(rules.opt_state_specs(cfg, mesh, abs_opt))
+        jitted = jax.jit(
+            step,
+            in_shardings=(pspecs, ospecs, bspecs),
+            out_shardings=(pspecs, ospecs, ns(P())),
+        )
+        lowered = jitted.lower(abs_params, abs_opt, specs)
+    else:
+        mb = 0
+        step = (R.make_prefill_step(cfg) if shape.kind == "prefill"
+                else R.make_serve_step(cfg))
+        jitted = jax.jit(step, in_shardings=(pspecs, bspecs))
+        lowered = jitted.lower(abs_params, specs)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    act_sharding.set_mesh(None)  # probe lowers unsharded
+    act_sharding.set_param_specs(None)
+
+    # NOTE (verified empirically): under SPMD, cost_analysis() FLOPs/bytes and
+    # memory_analysis() sizes are PER-DEVICE; collective shapes in as_text()
+    # are per-device too.  Roofline terms therefore do NOT divide by chips.
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_stats = {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        }
+    except Exception as e:  # backend may not implement it
+        mem_stats = {"error": str(e)}
+
+    coll = collective_bytes(compiled.as_text())
+    try:
+        probe = flops_probe(cfg, shape, mb)
+    except Exception as e:
+        probe = {"error": repr(e)[:500]}
+    n_dev = mesh.size
+    return {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind, "devices": n_dev, "micro_batches": mb,
+        "flops": cost.get("flops"), "bytes": cost.get("bytes accessed"),
+        "probe": probe,
+        "cost_analysis": {k: v for k, v in cost.items()
+                          if isinstance(v, (int, float)) and
+                          ("flops" in k or "bytes" in k or "utilization" not in k)},
+        "collective_bytes": coll,
+        "memory": mem_stats,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "params": T.param_count(cfg),
+        "active_params": T.active_param_count(cfg),
+    }
+
+
+def cell_path(arch, shape_name, mesh_name) -> Path:
+    return RESULTS_DIR / f"{arch}__{shape_name}__{mesh_name}.json"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells with existing result files")
+    ap.add_argument("--micro", type=int, default=None)
+    args = ap.parse_args()
+
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    cells = []
+    archs = sorted(R.ARCHS) if (args.all or not args.arch) else [args.arch]
+    for arch in archs:
+        cfg = R.get_arch(arch)
+        live = [s.name for s in shapes_for(cfg)]
+        shapes = [args.shape] if args.shape else live
+        for sh in shapes:
+            if sh not in live:
+                print(f"SKIP {arch} x {sh}: not applicable (DESIGN.md §5)")
+                continue
+            for mp in meshes:
+                cells.append((arch, sh, mp))
+
+    failures = 0
+    for arch, sh, mp in cells:
+        mesh_name = "2x16x16" if mp else "16x16"
+        path = cell_path(arch, sh, mesh_name)
+        if args.resume and path.exists():
+            print(f"skip (cached) {arch} x {sh} x {mesh_name}")
+            continue
+        print(f"=== {arch} x {sh} x {mesh_name} ===", flush=True)
+        try:
+            row = lower_cell(arch, sh, mp, micro_override=args.micro)
+            path.write_text(json.dumps(row, indent=1))
+            print(f"  ok: flops={row['flops']:.3e} "
+                  f"coll={sum(row['collective_bytes'].values()):.3e}B "
+                  f"compile={row['compile_s']}s", flush=True)
+        except Exception:
+            failures += 1
+            path.with_suffix(".err").write_text(traceback.format_exc())
+            print(f"  FAIL {arch} x {sh} x {mesh_name}:", flush=True)
+            traceback.print_exc()
+        jax.clear_caches()
+
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Debug tool: list the largest collectives (trip-scaled) for one cell.
+
+    PYTHONPATH=src python -m repro.launch.dump_collectives <arch> <shape> [n]
+"""
+
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+# ruff: noqa: E402
+import sys
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ALL_SHAPES
+from repro.launch import dryrun as DR
+from repro.launch import mesh as mesh_mod
+from repro.models import registry as R
+from repro.models import transformer as T
+from repro.sharding import activation as act
+from repro.sharding import rules
+
+
+def main():
+    arch, shape_name = sys.argv[1], sys.argv[2]
+    top_n = int(sys.argv[3]) if len(sys.argv) > 3 else 15
+    cfg = R.get_arch(arch)
+    shape = {s.name: s for s in ALL_SHAPES}[shape_name]
+    mesh = mesh_mod.make_production_mesh()
+    act.set_mesh(mesh, tp=rules.tp_enabled(cfg))
+
+    def ns(tree):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    specs = R.input_specs(cfg, shape)
+    if shape.kind == "train":
+        mb = DR.pick_micro_batches(cfg, shape, mesh)
+        step = R.make_train_step(cfg, micro_batches=mb)
+        abs_params = T.abstract_params(cfg)
+        abs_opt = jax.eval_shape(step.init_opt, abs_params)
+        jitted = jax.jit(step, in_shardings=(
+            ns(rules.param_specs(cfg, mesh)),
+            ns(rules.opt_state_specs(cfg, mesh, abs_opt)),
+            ns(rules.batch_specs(cfg, shape, mesh, specs))),
+            out_shardings=(ns(rules.param_specs(cfg, mesh)),
+                           ns(rules.opt_state_specs(cfg, mesh, abs_opt)),
+                           ns(P())))
+        compiled = jitted.lower(abs_params, abs_opt, specs).compile()
+    else:
+        mb = 0
+        step = (R.make_prefill_step(cfg) if shape.kind == "prefill"
+                else R.make_serve_step(cfg))
+        jitted = jax.jit(step, in_shardings=(
+            ns(rules.param_specs(cfg, mesh)),
+            ns(rules.batch_specs(cfg, shape, mesh, specs))))
+        compiled = jitted.lower(T.abstract_params(cfg), specs).compile()
+
+    comps: dict = {}
+    cur = None
+    for line in compiled.as_text().splitlines():
+        m = DR._COMP_HEAD_RE.match(line.strip())
+        if m:
+            cur = m.group(1)
+            comps[cur] = []
+        elif cur is not None:
+            comps[cur].append(line)
+    body_of = {}
+    for name, lines in comps.items():
+        for line in lines:
+            for cond, body in DR._WHILE_RE.findall(line):
+                body_of[body] = (name, cond)
+
+    def trip(c):
+        v = [int(x) for ln in comps.get(c, ())
+             for x in DR._CONST_RE.findall(ln)]
+        return max(v) if v else 1
+
+    def mult(c, d=0):
+        if d > 8 or c not in body_of:
+            return 1
+        parent, cond = body_of[c]
+        return trip(cond) * mult(parent, d + 1)
+
+    rows = []
+    for name, lines in comps.items():
+        ml = mult(name)
+        for line in lines:
+            m = DR._COLL_RE.search(line)
+            if m and m.group(3) != "-done":
+                rows.append((DR._shape_bytes(m.group(1)) * ml, ml,
+                             m.group(2), line.strip()[:110]))
+    rows.sort(reverse=True)
+    print(f"{arch} x {shape_name}: mb={mb} "
+          f"total scaled {sum(r[0] for r in rows)/1e9:.1f} GB")
+    for r in rows[:top_n]:
+        print(f"{r[0]/1e9:9.2f}GB x{r[1]:4d} {r[2]:14s} {r[3][:86]}")
+
+
+if __name__ == "__main__":
+    main()

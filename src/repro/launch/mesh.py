@@ -1,0 +1,38 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state.  The dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import;
+everything else sees the real topology.
+
+Target: TPU v5e pods, 256 chips/pod (16x16), 2 pods for the multi-pod
+dry-run.  Axes: ("data", "model") intra-pod; the "pod" axis is the outer
+data-parallel axis across the DCN.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1) -> Mesh:
+    """Mesh over whatever devices exist (tests / local runs)."""
+    n = len(jax.devices())
+    if n % model_parallel:
+        model_parallel = 1
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"))
+
+
+# Hardware constants for the roofline model (TPU v5e per chip).
+PEAK_BF16_FLOPS = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW = 50e9                 # B/s per link (single-link bottleneck model)
+HBM_BYTES = 16 * 1024**3      # 16 GiB

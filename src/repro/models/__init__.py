@@ -1,0 +1,1 @@
+from repro.models import cache, layers, mla, moe, recurrent, registry, transformer

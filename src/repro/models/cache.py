@@ -1,0 +1,111 @@
+"""Decode-cache construction: shapes, dtypes and abstract stand-ins.
+
+Cache structure mirrors the stack: {"scan": (tree_p0, ..., tree_p{period-1}),
+"rem": (tree_r0, ...)} — scan leaves carry a leading n_scan_periods dim.
+Attention layers hold (B, S_c, KV, hd) K/V (S_c = window for local layers —
+this is what makes recurrentgemma/xlstm O(1)-ish for long_500k); recurrent
+layers hold O(1) state.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelCfg
+
+
+def _layer_cache_defs(cfg: ModelCfg, spec: LayerSpec, batch: int, seq: int):
+    """dict name -> (shape, dtype) for one layer."""
+    kv_dt = jnp.bfloat16
+    d = {}
+    if spec.mixer == "attn":
+        s_c = min(seq, spec.window) if spec.window else seq
+        d["k"] = ((batch, s_c, cfg.n_kv_heads, cfg.head_dim), kv_dt)
+        d["v"] = ((batch, s_c, cfg.n_kv_heads, cfg.head_dim), kv_dt)
+    elif spec.mixer == "mla":
+        m = cfg.mla
+        d["ckv"] = ((batch, seq, m.kv_lora_rank), kv_dt)
+        d["kr"] = ((batch, seq, m.qk_rope_dim), kv_dt)
+    elif spec.mixer == "rglru":
+        dr = cfg.rnn.d_rnn or cfg.d_model
+        d["h"] = ((batch, dr), jnp.float32)
+        d["conv"] = ((batch, cfg.rnn.conv_width - 1, dr), kv_dt)
+    elif spec.mixer == "mlstm":
+        di = int(cfg.rnn.mlstm_proj_factor * cfg.d_model)
+        hd = di // cfg.n_heads
+        d["c"] = ((batch, cfg.n_heads, hd, hd), jnp.float32)
+        d["n"] = ((batch, cfg.n_heads, hd), jnp.float32)
+        d["conv"] = ((batch, cfg.rnn.conv_width - 1, di), kv_dt)
+    elif spec.mixer == "slstm":
+        d["h"] = ((batch, cfg.d_model), jnp.float32)
+        d["c"] = ((batch, cfg.d_model), jnp.float32)
+        d["n"] = ((batch, cfg.d_model), jnp.float32)
+    if spec.cross_attn:
+        d["xk"] = ((batch, cfg.encdec.enc_seq, cfg.n_kv_heads, cfg.head_dim),
+                   kv_dt)
+        d["xv"] = ((batch, cfg.encdec.enc_seq, cfg.n_kv_heads, cfg.head_dim),
+                   kv_dt)
+    return d
+
+
+def build_cache(cfg: ModelCfg, batch: int, seq: int,
+                make: Callable = None) -> dict:
+    """make(shape, dtype) -> leaf; defaults to zeros (concrete).  Pass
+    ``jax.ShapeDtypeStruct`` to get the abstract cache for the dry-run."""
+    if make is None:
+        make = lambda s, dt: jnp.zeros(s, dt)  # noqa: E731
+
+    def layer_tree(spec, lead=None):
+        defs = _layer_cache_defs(cfg, spec, batch, seq)
+        out = {}
+        for k, (shape, dt) in defs.items():
+            if lead is not None:
+                shape = (lead,) + shape
+            out[k] = make(shape, dt)
+        return out
+
+    pre = tuple(layer_tree(spec) for spec in cfg.prelude)
+    scan = tuple(layer_tree(spec, lead=cfg.n_scan_periods)
+                 for spec in cfg.pattern) if cfg.n_scan_periods else None
+    rem = tuple(layer_tree(cfg.pattern[j % cfg.period])
+                for j in range(cfg.n_remainder))
+    return {"pre": pre, "scan": scan, "rem": rem}
+
+
+def abstract_cache(cfg: ModelCfg, batch: int, seq: int) -> dict:
+    return build_cache(cfg, batch, seq, make=jax.ShapeDtypeStruct)
+
+
+def grow_cache(cache: dict, extra: int) -> dict:
+    """Pad the seq axis of every KV-ish leaf by ``extra`` empty slots
+    (write-then-attend decode needs write_pos < capacity).  Cross-attention
+    (xk/xv) and recurrent-state leaves are untouched."""
+    import jax
+
+    def pad(path, leaf):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if name in ("k", "v"):
+            axis = leaf.ndim - 3
+        elif name in ("ckv", "kr"):
+            axis = leaf.ndim - 2
+        else:
+            return leaf
+        widths = [(0, 0)] * leaf.ndim
+        widths[axis] = (0, extra)
+        return jnp.pad(leaf, widths)
+
+    return jax.tree_util.tree_map_with_path(pad, cache)
+
+
+def cache_bytes(cfg: ModelCfg, batch: int, seq: int) -> int:
+    total = 0
+    for spec in cfg.layer_specs():
+        for shape, dt in _layer_cache_defs(cfg, spec, batch, seq).values():
+            n = 1
+            for s in shape:
+                n *= s
+            total += n * jnp.dtype(dt).itemsize
+    return total

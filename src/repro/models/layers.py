@@ -1,0 +1,223 @@
+"""Shared transformer layers: norms, RoPE, blockwise attention, MLP.
+
+Attention is blockwise over query chunks (flash-style online softmax) so the
+(S x S) score matrix is never materialized — required for the 32k prefill and
+4k train shapes to fit HBM (see DESIGN.md §6).  All activations flow in
+``cfg.activation_dtype`` (bf16); softmax statistics and accumulators are f32.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms & activations
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    # (1 + scale) convention so zero-init means identity (same as rmsnorm)
+    out = out * (1.0 + scale.astype(jnp.float32)) + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def apply_norm(cfg, p: dict, prefix: str, x: jax.Array) -> jax.Array:
+    if cfg.norm == "layernorm":
+        return layernorm(x, p[f"{prefix}/scale"], p[f"{prefix}/bias"],
+                         cfg.norm_eps)
+    return rmsnorm(x, p[f"{prefix}/scale"], cfg.norm_eps)
+
+
+def activation(name: str, x: jax.Array) -> jax.Array:
+    if name == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    return jax.nn.silu(x)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return jnp.tanh(x / cap) * cap if cap > 0 else x
+
+
+# ---------------------------------------------------------------------------
+# Positions
+# ---------------------------------------------------------------------------
+
+def rope_tables(positions: jax.Array, head_dim: int, theta: float):
+    """cos/sin tables for rotary embedding; positions (...,S)."""
+    half = head_dim // 2
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freq  # (..., S, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, N, head_dim); cos/sin: (S, half) or (B, S, half)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:  # (S, half) -> broadcast over batch & heads
+        c = cos[None, :, None, :]
+        s = sin[None, :, None, :]
+    else:              # (B, S, half)
+        c = cos[:, :, None, :]
+        s = sin[:, :, None, :]
+    x1f = x1.astype(jnp.float32)
+    x2f = x2.astype(jnp.float32)
+    return jnp.concatenate([x1f * c - x2f * s, x2f * c + x1f * s],
+                           axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, dim: int) -> jax.Array:
+    return sinusoidal_at(jnp.arange(seq), dim)
+
+
+def sinusoidal_at(positions: jax.Array, dim: int) -> jax.Array:
+    """Sinusoidal encodings at (possibly traced) absolute positions (S,)."""
+    pos = positions.astype(jnp.float32)[:, None]
+    i = jnp.arange(dim // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10_000.0, 2 * i / dim)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise multi-head attention (GQA), causal / bidirectional / local
+# ---------------------------------------------------------------------------
+
+def _chunk_attend(q, k, v, q_pos, kv_pos, *, causal, window, scale, cap):
+    """One query chunk vs all kv.  q: (B, H, Cq, hd); k/v: (B, KV, S, hd).
+    Returns (out (B,H,Cq,hd) f32 accum happens here)."""
+    b, h, cq, hd = q.shape
+    kvh = k.shape[1]
+    groups = h // kvh
+    qg = q.reshape(b, kvh, groups, cq, hd)
+    scores = jnp.einsum("bkgqd,bksd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    scores = softcap(scores, cap)
+    mask = jnp.ones((cq, k.shape[2]), dtype=bool)
+    if causal:
+        mask &= kv_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= kv_pos[None, :] > (q_pos[:, None] - window)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", probs, v.astype(jnp.float32))
+    return out.reshape(b, h, cq, v.shape[-1])  # v head dim may differ (MLA)
+
+
+def attention(q, k, v, *, causal: bool, window: Optional[int], scale: float,
+              cap: float = 0.0, q_positions: Optional[jax.Array] = None,
+              kv_positions: Optional[jax.Array] = None,
+              chunk: int = 1024) -> jax.Array:
+    """q: (B, S_q, H, hd); k/v: (B, S_kv, KV, hd) -> (B, S_q, H, hd).
+
+    Scans over query chunks so peak memory is O(S_kv * chunk), not O(S^2).
+    """
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    if q_positions is None:
+        q_positions = jnp.arange(sq)
+    if kv_positions is None:
+        kv_positions = jnp.arange(skv)
+    qt = jnp.swapaxes(q, 1, 2)          # (B, H, Sq, hd)
+    kt = jnp.swapaxes(k, 1, 2)          # (B, KV, Skv, hd)
+    vt = jnp.swapaxes(v, 1, 2)
+
+    chunk = min(chunk, sq)
+    if sq % chunk:
+        chunk = sq  # ragged query lengths (smoke shapes): single chunk
+    n_chunks = sq // chunk
+
+    if n_chunks == 1:
+        out = _chunk_attend(qt, kt, vt, q_positions, kv_positions,
+                            causal=causal, window=window, scale=scale, cap=cap)
+    else:
+        qs = qt.reshape(b, h, n_chunks, chunk, hd)
+        ps = q_positions.reshape(n_chunks, chunk)
+
+        def body(_, xs):
+            qc, pc = xs
+            oc = _chunk_attend(qc, kt, vt, pc, kv_positions, causal=causal,
+                               window=window, scale=scale, cap=cap)
+            return None, oc
+
+        _, outs = jax.lax.scan(body, None,
+                               (jnp.moveaxis(qs, 2, 0), ps))
+        # v head dim may differ from q head dim (MLA)
+        out = jnp.moveaxis(outs, 0, 2).reshape(b, h, sq, outs.shape[-1])
+    return jnp.swapaxes(out, 1, 2).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (projections + cache plumbing)
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S, KV, hd)
+    v: jax.Array
+
+
+def qkv_project(cfg, p, prefix, x):
+    """x: (B, S, D) -> q (B,S,H,hd), k/v (B,S,KV,hd)."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dnh->bsnh", x, p[f"{prefix}/wq"].astype(dt))
+    k = jnp.einsum("bsd,dnh->bsnh", x, p[f"{prefix}/wk"].astype(dt))
+    v = jnp.einsum("bsd,dnh->bsnh", x, p[f"{prefix}/wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p[f"{prefix}/bq"].astype(dt)
+        k = k + p[f"{prefix}/bk"].astype(dt)
+        v = v + p[f"{prefix}/bv"].astype(dt)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p[f"{prefix}/q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p[f"{prefix}/k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def cross_attn_block(cfg, p, x, enc_kv: KVCache):
+    """Decoder cross-attention over precomputed encoder K/V (whisper)."""
+    dt = x.dtype
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["xattn/wq"].astype(dt))
+    out = attention(q, enc_kv.k.astype(dt), enc_kv.v.astype(dt), causal=False,
+                    window=None, scale=scale, chunk=cfg.attn_chunk)
+    b, sq = out.shape[:2]
+    out = out.reshape(b, sq, -1)
+    return jnp.dot(out, p["xattn/wo"].astype(dt))
+
+
+def encode_cross_kv(cfg, p, enc_out) -> KVCache:
+    dt = enc_out.dtype
+    k = jnp.einsum("bsd,dnh->bsnh", enc_out, p["xattn/wk"].astype(dt))
+    v = jnp.einsum("bsd,dnh->bsnh", enc_out, p["xattn/wv"].astype(dt))
+    return KVCache(k, v)
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP
+# ---------------------------------------------------------------------------
+
+def mlp_block(cfg, p, x, prefix="mlp"):
+    """Gated MLP (SwiGLU/GeGLU): (D -> F) * act(D -> F) -> D."""
+    from repro.sharding.activation import constrain
+    dt = x.dtype
+    gate = jnp.dot(x, p[f"{prefix}/w_gate"].astype(dt))
+    up = jnp.dot(x, p[f"{prefix}/w_up"].astype(dt))
+    h = activation(cfg.act, gate) * up
+    h = constrain(h, "batch", None, "model")
+    return jnp.dot(h, p[f"{prefix}/w_down"].astype(dt))

@@ -1,0 +1,84 @@
+"""DeepSeek-V2 Multi-head Latent Attention (MLA).
+
+Train/prefill path materializes per-head K/V from the latent; the decode path
+uses the absorbed form: queries are projected into the kv_lora latent space
+and attention runs directly over the (B, S, r + rope) latent cache — the
+whole point of MLA (cache is r+rope wide instead of 2*H*hd).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, attention, rmsnorm, rope_tables
+
+
+def mla_block(cfg, p, x, *, positions, cache, write_pos,
+              return_cache: bool):
+    m = cfg.mla
+    dt = x.dtype
+    h = cfg.n_heads
+    qk_dim = m.qk_nope_dim + m.qk_rope_dim
+    scale = 1.0 / math.sqrt(qk_dim)
+    b, s, d = x.shape
+
+    # Queries (full-rank for the lite model): (B,S,H,nope+rope)
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["mla/wq"].astype(dt))
+    q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+
+    # Latent KV + shared rope key
+    ckv = jnp.dot(x, p["mla/w_dkv"].astype(dt))        # (B,S,r)
+    ckv = rmsnorm(ckv, p["mla/kv_norm"], cfg.norm_eps)
+    krope = jnp.dot(x, p["mla/w_kr"].astype(dt))       # (B,S,rope)
+
+    cos, sin = rope_tables(positions, m.qk_rope_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    krope = apply_rope(krope[:, :, None, :], cos, sin)[:, :, 0, :]
+
+    w_uk = p["mla/w_uk"].astype(dt)   # (r, H, nope)
+    w_uv = p["mla/w_uv"].astype(dt)   # (r, H, v_hd)
+
+    new_cache = None
+    if cache is None:
+        # Materialized path (train / prefill).
+        k_nope = jnp.einsum("bsr,rnh->bsnh", ckv, w_uk)
+        v = jnp.einsum("bsr,rnh->bsnh", ckv, w_uv)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(krope[:, :, None, :],
+                                      (b, s, h, m.qk_rope_dim))], axis=-1)
+        qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = attention(qf, k, v, causal=True, window=None, scale=scale,
+                        q_positions=positions, kv_positions=positions,
+                        chunk=cfg.attn_chunk)
+        if return_cache:
+            new_cache = {"ckv": ckv, "kr": krope}
+    else:
+        # Absorbed latent decode, write-then-attend (no concat on the sharded
+        # seq dim — §Perf iter 13): DUS into the latent cache, causal-mask
+        # the slots beyond write_pos.
+        q_lat = jnp.einsum("bsnh,rnh->bsnr", q_nope, w_uk)
+        new_cache = {
+            "ckv": jax.lax.dynamic_update_slice_in_dim(
+                cache["ckv"], ckv.astype(cache["ckv"].dtype), write_pos, 1),
+            "kr": jax.lax.dynamic_update_slice_in_dim(
+                cache["kr"], krope.astype(cache["kr"].dtype), write_pos, 1),
+        }
+        ckv_all = new_cache["ckv"]
+        kr_all = new_cache["kr"]
+        scores = (jnp.einsum("bsnr,btr->bnst", q_lat.astype(jnp.float32),
+                             ckv_all.astype(jnp.float32))
+                  + jnp.einsum("bsnh,bth->bnst", q_rope.astype(jnp.float32),
+                               kr_all.astype(jnp.float32))) * scale
+        valid = jnp.arange(ckv_all.shape[1]) <= write_pos
+        scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        o_lat = jnp.einsum("bnst,btr->bsnr", probs,
+                           ckv_all.astype(jnp.float32))           # (B,1,H,r)
+        out = jnp.einsum("bsnr,rnh->bsnh", o_lat.astype(dt), w_uv)
+
+    out = out.reshape(b, s, -1)
+    out = jnp.dot(out, p["mla/wo"].astype(dt))
+    return out, new_cache

@@ -1,0 +1,113 @@
+"""Minimal optimizer library (optax-style GradientTransformations).
+
+AdamW (default) and Adafactor (factored second moment — the memory-lean
+baseline GaLore is compared against).  States are pytrees mirroring params so
+they shard with the same partition specs.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]
+
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        return {
+            "m": jax.tree.map(jnp.zeros_like, params),
+            "v": jax.tree.map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        tf = t.astype(jnp.float32)
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                         state["v"], grads)
+        bc1 = 1 - b1 ** tf
+        bc2 = 1 - b2 ** tf
+
+        def upd(m, v, p):
+            return -lr * ((m / bc1) / (jnp.sqrt(v / bc2) + eps)
+                          + weight_decay * p)
+
+        updates = jax.tree.map(upd, m, v, params)
+        return updates, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr: float = 3e-4, eps: float = 1e-30,
+              decay: float = 0.8) -> Optimizer:
+    """Factored second moment for >=2-D params: O(r+c) state instead of O(rc)."""
+
+    def _factored(shape):
+        return len(shape) >= 2
+
+    def init(params):
+        def leaf(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+        return {"s": jax.tree.map(leaf, params,
+                                  is_leaf=lambda x: hasattr(x, "shape")),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        beta = 1.0 - (t.astype(jnp.float32) + 1.0) ** -decay
+
+        def upd(g, s):
+            g2 = g.astype(jnp.float32) ** 2 + eps
+            if _factored(g.shape):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(jnp.mean(vr, axis=-1,
+                                                keepdims=True)[..., None],
+                                       eps))
+                upd_ = g / jnp.sqrt(denom + eps)
+                return -lr * upd_.astype(g.dtype), {"vr": vr, "vc": vc}
+            v = beta * s["v"] + (1 - beta) * g2
+            return -lr * (g / jnp.sqrt(v + eps)).astype(g.dtype), {"v": v}
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_s = treedef.flatten_up_to(state["s"])
+        outs = [upd(g, s) for g, s in zip(flat_g, flat_s)]
+        updates = treedef.unflatten([o[0] for o in outs])
+        new_s = treedef.unflatten([o[1] for o in outs])
+        return updates, {"s": new_s, "t": t}
+
+    return Optimizer(init, update)
+
+
+def sgd(lr: float = 1e-2) -> Optimizer:
+    def init(params):
+        return {"t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        return (jax.tree.map(lambda g: -lr * g, grads),
+                {"t": state["t"] + 1})
+
+    return Optimizer(init, update)
+
+
+def get(name: str, lr: float) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr)
+    if name == "adafactor":
+        return adafactor(lr)
+    if name == "sgd":
+        return sgd(lr)
+    raise ValueError(f"unknown optimizer {name!r}")

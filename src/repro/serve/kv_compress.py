@@ -1,0 +1,69 @@
+"""KV-cache compression via the paper's mixed-precision RSVD (beyond-paper).
+
+A slot's per-layer K (and V) history (S, KV*hd) is tall and skinny in the
+head dim after flattening; empirically its spectrum decays fast for long
+contexts.  We factor K ~ U_k S_k V_k^T at rank r with the mixed-precision
+RSVD and keep (U_k*S_k, V_k) — memory r*(S + d)/ (S*d) of the original —
+then reconstruct on attention (or attend in factored form:
+q^T K^T = (q^T V_k) (U_k S_k)^T, two skinny GEMMs).
+
+This module provides the factor/reconstruct/attend primitives and a
+``compress_cache`` pass over an engine cache; serving quality vs rank is
+benchmarked in benchmarks/kv_compress_bench.py.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rsvd as rsvd_mod
+
+
+class FactoredKV(NamedTuple):
+    us: jax.Array   # (S, r)  U * S
+    vt: jax.Array   # (r, d)
+
+
+def compress_matrix(key, m: jax.Array, rank: int) -> FactoredKV:
+    res = rsvd_mod.rsvd(key, m.astype(jnp.float32), rank,
+                        oversample=min(8, max(2, rank // 4)),
+                        method="shgemm")
+    return FactoredKV(res.u * res.s[None, :], res.vt)
+
+
+def reconstruct(f: FactoredKV) -> jax.Array:
+    return jnp.dot(f.us, f.vt)
+
+
+def factored_scores(q: jax.Array, f: FactoredKV) -> jax.Array:
+    """q: (..., d) -> scores (..., S) without materializing K."""
+    qv = jnp.einsum("...d,rd->...r", q.astype(jnp.float32), f.vt)
+    return jnp.einsum("...r,sr->...s", qv, f.us)
+
+
+def compression_error(m: jax.Array, f: FactoredKV) -> jax.Array:
+    m = m.astype(jnp.float32)
+    return jnp.linalg.norm(m - reconstruct(f)) / jnp.linalg.norm(m)
+
+
+def compress_kv_cache(key, k_cache: jax.Array, v_cache: jax.Array,
+                      rank: int):
+    """k/v: (B, S, KV, hd) -> per-(batch, head) factored caches.
+
+    vmaps the RSVD over batch x head; returns pytrees of FactoredKV parts.
+    """
+    b, s, kv, hd = k_cache.shape
+
+    def one(key, m):  # m: (S, hd)
+        f = compress_matrix(key, m, rank)
+        return f.us, f.vt
+
+    keys = jax.random.split(key, b * kv).reshape(b, kv, 2)
+    km = jnp.swapaxes(k_cache, 1, 2)      # (B, KV, S, hd)
+    vm = jnp.swapaxes(v_cache, 1, 2)
+    us_k, vt_k = jax.vmap(jax.vmap(one))(keys, km.astype(jnp.float32))
+    us_v, vt_v = jax.vmap(jax.vmap(one))(keys, vm.astype(jnp.float32))
+    return {"k": FactoredKV(us_k, vt_k), "v": FactoredKV(us_v, vt_v)}

@@ -1,0 +1,106 @@
+"""Activation sharding constraints (block-boundary re-anchoring).
+
+XLA's sharding propagation can lose the batch sharding across ops it
+partitions badly (e.g. gathers from sharded tables — observed as
+"involuntary full rematerialization" in the 16x16 dry-run, which then drags
+full-global-batch all-reduces through every layer).  The fix is the standard
+MaxText/Megatron practice: re-anchor activations with explicit constraints
+at block boundaries.
+
+The mesh is process-global state set by the launcher (dryrun/train) BEFORE
+tracing; model code calls ``constrain(x, "batch", None, "model")`` with
+logical axis names and this module maps them to the active mesh (no-op when
+no mesh is active — smoke tests single-device path).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE: dict = {"mesh": None, "tp": True, "param_specs": None}
+
+LOGICAL = {
+    "batch": ("pod", "data"),   # filtered to the axes the mesh has
+    "model": "model",           # TP axis — gated by the tp flag
+    "vocab": "model",           # vocab sharding survives even with TP off
+    "data": "data",
+}
+
+
+def set_mesh(mesh: Optional[Mesh], tp: bool = True) -> None:
+    """tp=False: auto-layout decided the arch is too small for tensor
+    parallelism — the "model" axis is used only for weight storage (ZeRO) and
+    vocab sharding; activation constraints along "model" become no-ops so
+    compute is replicated instead of psum-ing every block (EXPERIMENTS.md
+    §Perf iteration 3)."""
+    _ACTIVE["mesh"] = mesh
+    _ACTIVE["tp"] = tp
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _ACTIVE["mesh"]
+
+
+def get_tp() -> bool:
+    return _ACTIVE["tp"]
+
+
+def set_param_specs(specs: Optional[dict]) -> None:
+    """Register the parameter PartitionSpec tree so the bf16 compute-cast can
+    pin its output to the SOURCE sharding — otherwise XLA reorders the
+    convert after the ZeRO all-gather and moves f32 on the wire
+    (§Perf iteration 10)."""
+    _ACTIVE["param_specs"] = specs
+
+
+def pin_param(key: str, x: jax.Array) -> jax.Array:
+    mesh = _ACTIVE["mesh"]
+    specs = _ACTIVE["param_specs"]
+    if mesh is None or specs is None or key not in specs:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, specs[key]))
+
+
+def replicate(x: jax.Array) -> jax.Array:
+    """Force a leaf fully replicated (ZeRO weight gather at use)."""
+    mesh = _ACTIVE["mesh"]
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*([None] * x.ndim))))
+
+
+def _resolve(mesh: Mesh, name):
+    if name is None:
+        return None
+    if name == "model" and not _ACTIVE["tp"]:
+        return None
+    ax = LOGICAL.get(name, name)
+    if isinstance(ax, tuple):
+        ax = tuple(a for a in ax if a in mesh.axis_names)
+        return ax if ax else None
+    return ax if ax in mesh.axis_names else None
+
+
+def constrain(x: jax.Array, *logical_axes) -> jax.Array:
+    """with_sharding_constraint by logical axis names; no-op without a mesh
+    or when a dim isn't divisible by its axis size."""
+    mesh = _ACTIVE["mesh"]
+    if mesh is None:
+        return x
+    spec = []
+    for dim, name in zip(x.shape, logical_axes):
+        ax = _resolve(mesh, name)
+        if ax is not None:
+            size = 1
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                size *= mesh.shape[a]
+            if dim % size:
+                ax = None
+        spec.append(ax)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

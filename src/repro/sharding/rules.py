@@ -1,0 +1,169 @@
+"""Logical-axis -> mesh-axis rules and PartitionSpec derivation.
+
+Parallelism layout (DESIGN.md §6):
+  * batch            -> ("pod", "data")   [DP; pod is the outer DP axis]
+  * heads/mlp/inner/
+    expert/vocab     -> "model"           [TP / EP megatron-style]
+  * embed (weights)  -> "data"            [FSDP / zero-3 within pod]
+  * decode KV seq    -> "model"           [flash-decoding style sharded cache]
+  * long-context (B=1) cache seq / window -> ("data", "model") as divisible
+
+Every rule is divisibility-checked against the actual dim: a non-divisible
+axis is dropped (replicated) instead of relying on GSPMD padding, so the
+memory analysis stays honest.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelCfg, ShapeCfg
+from repro.models import transformer as T
+
+# logical axis -> preferred mesh axis (params)
+PARAM_RULES: dict[str, Optional[str]] = {
+    "vocab": "model",
+    "embed": "data",      # FSDP shard of the non-TP weight dim
+    "heads": "model",
+    "mlp": "model",
+    "inner": "model",
+    "expert": "model",
+    "layers": None,       # scan dim: never sharded
+    "inner2": None,
+    "embed2": None,
+}
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        return int(np.prod([mesh.shape[n] for n in name]))
+    return mesh.shape[name]
+
+
+def _maybe(mesh: Mesh, dim: int, axis) -> Optional[str]:
+    """axis if dim is divisible by its mesh size, else None (replicate)."""
+    if axis is None:
+        return None
+    return axis if dim % _axis_size(mesh, axis) == 0 else None
+
+
+def batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def tp_enabled(cfg: ModelCfg) -> bool:
+    """Auto-layout: tensor parallelism pays only when the per-shard matmul
+    stays MXU-efficient; below ~3k d_model the TP psums dominate compute on a
+    16-wide model axis, so small archs run replicated-compute with the model
+    axis reserved for ZeRO storage + vocab sharding + decode cache sharding.
+    Expert parallelism is INDEPENDENT of this flag (moe_block's shard_map
+    always shards experts over `model`), so MoE archs with small d_model run
+    EP-without-attention-TP (§Perf iteration 6)."""
+    return cfg.d_model >= 3072
+
+
+def param_specs(cfg: ModelCfg, mesh: Mesh, serving: bool = False) -> dict[str, P]:
+    """PartitionSpec per parameter from the schema's logical axes.
+
+    serving=True + non-TP arch: weights live REPLICATED (serving layout) so
+    decode steps don't pay a per-token ZeRO gather of the whole model —
+    vocab-sharded tables and expert weights stay sharded (§Perf iter 12).
+    """
+    replicate_all = serving and not tp_enabled(cfg)
+    out = {}
+    for name, d in T.schema(cfg).items():
+        if replicate_all and "vocab" not in d.axes and "expert" not in d.axes:
+            out[name] = P(*([None] * len(d.shape)))
+            continue
+        spec = tuple(_maybe(mesh, dim, PARAM_RULES.get(ax))
+                     for dim, ax in zip(d.shape, d.axes))
+        out[name] = P(*spec)
+    return out
+
+
+def opt_state_specs(cfg: ModelCfg, mesh: Mesh, opt_state) -> dict:
+    """Mirror param specs onto optimizer moments; scalars replicated."""
+    pspecs = param_specs(cfg, mesh)
+
+    def for_tree(tree):
+        if isinstance(tree, dict) and set(tree) >= set(pspecs):
+            return {k: (pspecs[k] if k in pspecs else P()) for k in tree}
+        return jax.tree.map(lambda _: P(), tree)
+
+    out = {}
+    for key, sub in opt_state.items():
+        if key in ("m", "v"):
+            out[key] = for_tree(sub)
+        elif key == "s":  # adafactor: factored moments lose the last dim
+            out[key] = jax.tree.map(lambda _: P(), sub)
+        else:
+            out[key] = P()
+    return out
+
+
+def batch_specs(cfg: ModelCfg, shape: ShapeCfg, mesh: Mesh, inputs) -> dict:
+    """PartitionSpecs for the input pytree of one shape cell."""
+    ba = batch_axes(mesh)
+
+    def spec_for(path, leaf) -> P:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        dims = leaf.shape
+        if name == "write_pos" or not dims:
+            return P()
+        if "cache" in name:
+            # scan-stacked cache leaves carry a leading n_periods dim
+            lead = "cache/scan" in name
+            body = dims[1:] if lead else dims
+            b = _maybe(mesh, body[0], ba)
+            if b is None and isinstance(ba, tuple):
+                b = _maybe(mesh, body[0], "data")
+            spec = _cache_leaf_spec(name, body, mesh, b)
+            return P(None, *spec) if lead else spec
+        b = _maybe(mesh, dims[0], ba)
+        if b is None and isinstance(ba, tuple):
+            b = _maybe(mesh, dims[0], "data")
+        if name.startswith(("tokens", "labels")):
+            return P(b)
+        if name.startswith(("img_embeds", "enc_embeds")):
+            return P(b, None, None)
+        return P(b)
+
+    return jax.tree_util.tree_map_with_path(spec_for, inputs)
+
+
+def _cache_leaf_spec(name: str, dims, mesh: Mesh, b) -> P:
+    """Cache leaves (leaf names: k/v/xk/xv (B,S,KV,hd), ckv/kr (B,S,r),
+    conv (B,W-1,C), h/c/n recurrent states)."""
+    leaf = name.rsplit("/", 1)[-1]
+    if leaf in ("k", "v", "xk", "xv"):
+        # sequence-sharded KV (flash-decoding); fall back over both spare axes
+        s_ax = _maybe(mesh, dims[1], "model")
+        if b is None and s_ax is not None:
+            s_ax = _maybe(mesh, dims[1], ("data", "model") if
+                          "pod" not in mesh.axis_names else
+                          ("pod", "data", "model")) or s_ax
+        rest = (None,) * (len(dims) - 2)
+        return P(b, s_ax, *rest)
+    if leaf in ("ckv", "kr"):
+        return P(b, _maybe(mesh, dims[1], "model"), None)
+    if leaf == "conv":
+        return P(b, None, _maybe(mesh, dims[-1], "model"))
+    # recurrent states: shard the widest trailing dim over model
+    if len(dims) >= 2:
+        spec = [b] + [None] * (len(dims) - 1)
+        spec[-1] = _maybe(mesh, dims[-1], "model")
+        return P(*spec)
+    return P(b)
+
+
+def shard_params(cfg: ModelCfg, mesh: Mesh, params: dict) -> dict:
+    specs = param_specs(cfg, mesh)
+    return {k: jax.device_put(v, NamedSharding(mesh, specs[k]))
+            for k, v in params.items()}

@@ -1,0 +1,165 @@
+"""Per-architecture smoke tests: reduced same-family configs, one train step
+and one decode step on CPU, asserting output shapes and finiteness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeCfg, smoke_config
+from repro.models import cache as cache_mod
+from repro.models import registry as R
+from repro.models import transformer as T
+
+jax.config.update("jax_platform_name", "cpu")
+
+ARCH_NAMES = sorted(R.ARCHS)
+SMOKE_TRAIN = ShapeCfg("smoke_train", "train", 32, 2)
+SMOKE_PREFILL = ShapeCfg("smoke_prefill", "prefill", 32, 2)
+SMOKE_DECODE = ShapeCfg("smoke_decode", "decode", 16, 2)
+
+
+@pytest.fixture(scope="module", params=ARCH_NAMES)
+def arch(request):
+    cfg = smoke_config(R.get_arch(request.param))
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_param_shapes_and_specs(arch):
+    cfg, params = arch
+    defs = T.schema(cfg)
+    assert set(defs) == set(params)
+    for name, d in defs.items():
+        assert params[name].shape == d.shape, name
+        assert len(d.axes) == len(d.shape), name
+
+
+def test_train_step(arch):
+    cfg, params = arch
+    batch = R.materialize_inputs(cfg, SMOKE_TRAIN, jax.random.PRNGKey(1))
+    step = R.make_train_step(cfg, lr=1e-3)
+    opt = step.init_opt(params)
+    p2, o2, metrics = jax.jit(step)(params, opt, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss) and loss > 0, loss
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually moved
+    moved = any(
+        float(jnp.max(jnp.abs(p2[k] - params[k]))) > 0 for k in params)
+    assert moved
+
+
+def test_train_loss_decreases(arch):
+    cfg, params = arch
+    batch = R.materialize_inputs(cfg, SMOKE_TRAIN, jax.random.PRNGKey(2))
+    step = jax.jit(R.make_train_step(cfg, lr=3e-3))
+    opt = R.make_train_step(cfg).init_opt(params)
+    losses = []
+    p = params
+    for _ in range(5):
+        p, opt, m = step(p, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0], losses
+
+
+def test_prefill_then_decode_matches_full_forward(arch):
+    """Prefill S tokens, decode one more; logits must match a full forward
+    over S+1 tokens (cache correctness)."""
+    cfg, params = arch
+    b, s = 2, 16
+    key = jax.random.PRNGKey(3)
+    tokens = jax.random.randint(key, (b, s + 1), 0, cfg.vocab, jnp.int32)
+    extra = {}
+    if cfg.vlm:
+        extra["img_embeds"] = 0.01 * jax.random.normal(
+            key, (b, cfg.vlm.num_image_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.encdec:
+        extra["enc_embeds"] = 0.01 * jax.random.normal(
+            key, (b, cfg.encdec.enc_seq, cfg.d_model), jnp.bfloat16)
+
+    # full forward over S+1 (same final transform as the serve path:
+    # f32 + final softcap — see registry._final_logits)
+    from repro.models.registry import _final_logits
+    out_full = T.forward(cfg, params, tokens, **extra)
+    want = _final_logits(cfg, out_full.logits[:, -1])
+
+    # prefill S then one decode step (grow by one slot: write-then-attend
+    # decode writes the new token AT write_pos, so capacity must exceed it)
+    out_pre = T.forward(cfg, params, tokens[:, :s], return_cache=True, **extra)
+    cache = cache_mod.grow_cache(out_pre.cache, 1)
+    serve = R.make_serve_step(cfg)
+    n_img = cfg.vlm.num_image_tokens if cfg.vlm else 0
+    got, new_cache = jax.jit(serve)(params, {
+        "tokens": tokens[:, s:], "cache": cache,
+        "write_pos": jnp.asarray(s + n_img, jnp.int32)})
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0.15, atol=0.15)
+    # correlation check (bf16 accumulation-order noise tolerated)
+    gc = np.corrcoef(np.asarray(got).ravel(), np.asarray(want).ravel())[0, 1]
+    assert gc > 0.99, gc
+
+
+def test_decode_step_shapes(arch):
+    cfg, params = arch
+    b, s = 2, 16
+    cache = cache_mod.build_cache(cfg, b, s)
+    serve = R.make_serve_step(cfg)
+    tokens = jnp.zeros((b, 1), jnp.int32)
+    logits, new_cache = jax.jit(serve)(params, {
+        "tokens": tokens, "cache": cache,
+        "write_pos": jnp.asarray(s - 1, jnp.int32)})
+    assert logits.shape == (b, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+    assert jax.tree.structure(new_cache) == jax.tree.structure(cache)
+    for a, c in zip(jax.tree.leaves(new_cache), jax.tree.leaves(cache)):
+        assert a.shape == c.shape
+
+
+def test_full_config_param_count():
+    """Full (non-smoke) configs land near their advertised sizes."""
+    expect_b = {
+        "command-r-plus-104b": (90, 115),
+        "llava-next-34b": (30, 38),
+        "codeqwen1.5-7b": (6, 8.5),
+        "gemma2-2b": (2.0, 3.3),
+        "qwen3-0.6b": (0.4, 0.9),
+        "whisper-large-v3": (1.2, 2.2),
+        "recurrentgemma-2b": (2.0, 3.6),
+        "qwen3-moe-30b-a3b": (26, 33),
+        "deepseek-v2-lite-16b": (13, 18),
+        "xlstm-350m": (0.25, 0.55),
+    }
+    for name, (lo, hi) in expect_b.items():
+        n = T.param_count(R.get_arch(name)) / 1e9
+        assert lo <= n <= hi, f"{name}: {n:.2f}B not in [{lo},{hi}]"
+
+
+def test_moe_active_params():
+    cfg = R.get_arch("qwen3-moe-30b-a3b")
+    active = T.active_param_count(cfg) / 1e9
+    assert 2.0 <= active <= 4.5, active
+
+
+def test_per_arch_config_modules():
+    """One importable configs/<arch>.py per assigned architecture."""
+    import importlib
+    mods = {
+        "llava-next-34b": "llava_next_34b",
+        "command-r-plus-104b": "command_r_plus_104b",
+        "gemma2-2b": "gemma2_2b",
+        "qwen3-0.6b": "qwen3_0_6b",
+        "codeqwen1.5-7b": "codeqwen15_7b",
+        "whisper-large-v3": "whisper_large_v3",
+        "recurrentgemma-2b": "recurrentgemma_2b",
+        "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+        "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+        "xlstm-350m": "xlstm_350m",
+    }
+    for arch, mod in mods.items():
+        m = importlib.import_module(f"repro.configs.{mod}")
+        assert m.CONFIG is R.get_arch(arch)
+        # smoke = prelude + two pattern periods (+ optional remainder layer)
+        assert m.SMOKE.n_layers <= (2 * len(m.CONFIG.pattern)
+                                    + len(m.CONFIG.prelude) + 1)
+        assert len(m.SHAPES) in (3, 4)

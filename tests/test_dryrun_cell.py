@@ -1,0 +1,35 @@
+"""End-to-end dry-run regression: one real cell through launch/dryrun.py in
+a subprocess (512 placeholder devices), asserting the artifact schema the
+roofline analysis depends on."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_dryrun_smallest_cell(tmp_path):
+    env = dict(os.environ, PYTHONPATH="src",
+               REPRO_DRYRUN_DIR=str(tmp_path))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "xlstm-350m",
+         "--shape", "decode_32k", "--mesh", "single"],
+        env=env, capture_output=True, text=True, timeout=580,
+        cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert out.returncode == 0, out.stderr[-3000:]
+    path = tmp_path / "xlstm-350m__decode_32k__16x16.json"
+    assert path.exists(), list(tmp_path.iterdir())
+    row = json.loads(path.read_text())
+    # schema the roofline reader requires
+    assert row["devices"] == 256
+    assert row["flops"] and row["flops"] > 0
+    assert row["probe"]["global_flops"] > 0
+    assert set(row["collective_bytes"]) == {
+        "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+        "collective-permute"}
+    assert row["memory"]["argument_bytes"] > 0
+    # serving layout: per-device argument bytes must fit a v5e chip
+    assert row["memory"]["argument_bytes"] < 16 * 2**30

@@ -1,0 +1,85 @@
+"""Flash-attention Pallas kernel: shape/GQA/causal sweeps vs the jnp oracle,
+plus the end-to-end model path (cfg.use_flash_kernel)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeCfg, smoke_config
+from repro.kernels import ops
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import flash_attention_ref
+from repro.models import registry as R
+from repro.models import transformer as T
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _qkv(key, b, s, h, kvh, hd, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, s, kvh, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, s, kvh, hd), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("b,s,h,kvh,hd,bq,bkv", [
+    (2, 256, 8, 4, 64, 64, 64),     # GQA 2:1
+    (1, 512, 4, 1, 128, 128, 256),  # MQA, rectangular blocks
+    (2, 128, 4, 4, 32, 64, 32),     # MHA
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_kernel_matches_oracle(b, s, h, kvh, hd, bq, bkv, causal):
+    q, k, v = _qkv(jax.random.PRNGKey(b * s + h), b, s, h, kvh, hd)
+    got = flash_attention(q, k, v, causal=causal, block_q=bq, block_kv=bkv,
+                          interpret=True)
+    want = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2, atol=3e-2)
+
+
+def test_ops_wrapper_pads_ragged():
+    q, k, v = _qkv(jax.random.PRNGKey(7), 2, 200, 4, 2, 64)  # 200 % 128 != 0
+    got = ops.flash_attention(q, k, v, causal=True)
+    want = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2, atol=3e-2)
+
+
+def test_f32_inputs():
+    q, k, v = _qkv(jax.random.PRNGKey(9), 1, 128, 4, 4, 64, dtype=jnp.float32)
+    got = flash_attention(q, k, v, causal=True, block_q=64, block_kv=64,
+                          interpret=True)
+    want = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_model_flash_path_matches_jnp_path():
+    """qwen3 smoke forward with cfg.use_flash_kernel must match the default
+    blockwise-jnp attention path."""
+    base = smoke_config(R.get_arch("qwen3-0.6b"))
+    params = T.init_params(base, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                base.vocab, jnp.int32)
+    ref_logits = T.forward(base, params, tokens).logits
+    flash_cfg = base.with_(use_flash_kernel=True)
+    got_logits = T.forward(flash_cfg, params, tokens).logits
+    np.testing.assert_allclose(np.asarray(got_logits, np.float32),
+                               np.asarray(ref_logits, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_causal_block_skip_accounting():
+    """The triangular grid skips ceil((n-1)n/2)/n^2 ~ half the kv blocks —
+    structural evidence for the 2x attention-FLOP claim."""
+    s, bq = 4096, 256
+    n = s // bq
+    total = n * n
+    run = sum(1 for iq in range(n) for ik in range(n)
+              if ik * bq <= iq * bq + bq - 1)
+    assert run == n * (n + 1) // 2
+    assert run / total == pytest.approx(0.5, abs=0.15)

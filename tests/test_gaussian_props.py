@@ -1,0 +1,87 @@
+"""§3.2 reproduction tests: Table 1 values, Fig. 2 variance behaviour."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import gaussian as G
+
+
+def test_table1_counts_match_paper():
+    # Paper Table 1 bottom, all published entries.
+    expect = {
+        "FP8_1 (e4m3)": (111, 127, 143),
+        "FP8_2 (e5m2)": (119, 127, 135),
+        "FP16 (e5m10)": (30_719, 32_767, 34_815),
+        "bfloat16 (e8m7)": (32_511, 32_767, 33_023),
+        "TF32 (e8m10)": (260_095, 262_143, 264_191),
+        "FP32 (e8m23)": (2_130_706_431, 2_147_483_647, 2_164_260_863),
+    }
+    for fmt in G.TABLE1_FORMATS:
+        got = tuple(G.count_within_sigma_range(fmt, s) for s in (0, 1, 2))
+        assert got == expect[fmt.name], fmt.name
+
+
+def test_table1_probabilities_match_paper():
+    # Paper Table 1 top (one significant figure as published).
+    assert G.underflow_prob(G.FP8_E4M3) == pytest.approx(8e-4, rel=0.3)
+    assert G.not_normalized_prob(G.FP8_E4M3) == pytest.approx(6e-3, rel=0.3)
+    assert G.underflow_prob(G.FP8_E5M2) == pytest.approx(6e-6, rel=0.3)
+    assert G.not_normalized_prob(G.FP8_E5M2) == pytest.approx(2e-5, rel=0.3)
+    assert G.underflow_prob(G.FP16) == pytest.approx(2e-8, rel=0.5)
+    assert G.not_normalized_prob(G.FP16) == pytest.approx(2e-5, rel=0.3)
+    # bfloat16 not-normalized < 2e-12 per paper.
+    assert G.not_normalized_prob(G.BF16) < 2e-12
+
+
+def test_overflow_negligible_iff_wide_exponent():
+    """Paper §3.2.1: overflow negligible when X > 3 for <=1e8 samples."""
+    for fmt in (G.FP16, G.BF16, G.TF32, G.FP32, G.FP8_E5M2):
+        assert G.overflow_log10_prob(fmt) < -10
+    # e4m3 max is 448 ~ 2^8.8 sigma: overflow prob tiny but non-trivial
+    assert G.overflow_log10_prob(G.FP8_E4M3) < -100
+
+
+def test_max_values():
+    assert G.FP16.max_value == 65504.0
+    assert G.FP32.max_value == pytest.approx(3.4028235e38, rel=1e-6)
+    # IEEE-like e4m3 per paper Eq. 15: 2^7 * (2 - 2^-3) = 240 (the OCP variant
+    # that reaches 448 is not IEEE-like; the paper uses the IEEE-like form).
+    assert G.FP8_E4M3.max_value == 240.0
+
+
+def test_variance_approaches_one_with_mantissa():
+    """Fig. 2: alpha_Y -> 1 exponentially in the mantissa length."""
+    a_e4m3 = G.rounded_gaussian_variance(G.FP8_E4M3)
+    a_bf16 = G.rounded_gaussian_variance(G.BF16)
+    a_fp16 = G.rounded_gaussian_variance(G.FP16)
+    assert abs(a_e4m3 - 1) > abs(a_bf16 - 1) > abs(a_fp16 - 1)
+    assert abs(a_fp16 - 1) < 1e-6
+    assert abs(a_bf16 - 1) < 1e-4
+    # all close to 1 => no rescaling needed (Theorems 4/5)
+    assert a_e4m3 == pytest.approx(1.0, abs=5e-3)
+
+
+def test_round_to_format_idempotent_and_rn():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=4096)
+    q = G.round_to_format(x, G.FP16)
+    q2 = G.round_to_format(q, G.FP16)
+    np.testing.assert_array_equal(q, q2)
+    # RN: error within half-ulp
+    ulp = np.exp2(np.floor(np.log2(np.abs(x))) - G.FP16.mant_bits)
+    assert np.all(np.abs(q - x) <= 0.5 * ulp + 1e-12)
+    # matches numpy's native fp16 cast (RN) away from denormals
+    big = x[np.abs(x) > 1e-2]
+    np.testing.assert_allclose(G.round_to_format(big, G.FP16),
+                               big.astype(np.float16).astype(np.float64))
+
+
+def test_round_to_format_matches_bf16_cast():
+    import jax.numpy as jnp
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=2048).astype(np.float32)
+    ours = G.round_to_format(x, G.BF16)
+    jaxs = np.asarray(jnp.asarray(x).astype(jnp.bfloat16), np.float64)
+    np.testing.assert_array_equal(ours, jaxs)

@@ -1,0 +1,72 @@
+"""RP-HOSVD (Alg. 2/3) and randomized least squares."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hosvd, lstsq
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_unfold_fold_roundtrip():
+    t = jax.random.normal(jax.random.PRNGKey(0), (5, 7, 11, 3))
+    for mode in range(4):
+        m = hosvd.unfold(t, mode)
+        assert m.shape == (t.shape[mode], t.size // t.shape[mode])
+        np.testing.assert_array_equal(np.asarray(hosvd.fold(m, mode, t.shape)),
+                                      np.asarray(t))
+
+
+def test_mode_dot_matches_einsum():
+    t = jax.random.normal(jax.random.PRNGKey(1), (6, 8, 10))
+    m = jax.random.normal(jax.random.PRNGKey(2), (4, 8))
+    got = hosvd.mode_dot(t, m, 1)
+    want = jnp.einsum("jb,abc->ajc", m, t)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("method", ["f32", "shgemm"])
+def test_rp_hosvd_recovers_low_rank_tensor(method):
+    """Alg. 3 tensor has multilinear rank (J_i - pad); projecting to J_i must
+    reconstruct to ~machine precision (paper Fig. 9 accuracy)."""
+    t = hosvd.make_test_tensor(jax.random.PRNGKey(3), (40, 48, 56), (12, 12, 12))
+    res = hosvd.rp_hosvd(jax.random.PRNGKey(4), t, (12, 12, 12), method=method)
+    err = float(hosvd.reconstruction_error(t, res))
+    assert err < 1e-4, err
+    for i, q in enumerate(res.factors):
+        qtq = np.asarray(q.T @ q)
+        np.testing.assert_allclose(qtq, np.eye(q.shape[1]), atol=1e-4)
+
+
+def test_rp_hosvd_shgemm_matches_f32_accuracy():
+    t = hosvd.make_test_tensor(jax.random.PRNGKey(5), (32, 32, 32), (10, 10, 10))
+    e32 = float(hosvd.reconstruction_error(
+        t, hosvd.rp_hosvd(jax.random.PRNGKey(6), t, (10, 10, 10), method="f32")))
+    esh = float(hosvd.reconstruction_error(
+        t, hosvd.rp_hosvd(jax.random.PRNGKey(6), t, (10, 10, 10), method="shgemm")))
+    # "same level" (paper Fig. 9): both at the f32 rounding floor.
+    assert esh <= max(5.0 * e32, 2e-5)
+
+
+def test_sthosvd_not_worse():
+    t = hosvd.make_test_tensor(jax.random.PRNGKey(7), (32, 32, 32), (10, 10, 10))
+    e_h = float(hosvd.reconstruction_error(
+        t, hosvd.rp_hosvd(jax.random.PRNGKey(8), t, (10, 10, 10))))
+    e_st = float(hosvd.reconstruction_error(
+        t, hosvd.rp_sthosvd(jax.random.PRNGKey(8), t, (10, 10, 10))))
+    assert e_st <= 5.0 * e_h + 1e-5
+
+
+def test_sketch_precond_lstsq():
+    key = jax.random.PRNGKey(9)
+    k1, k2, k3 = jax.random.split(key, 3)
+    a = jax.random.normal(k1, (2048, 64))
+    x_true = jax.random.normal(k2, (64,))
+    b = a @ x_true + 1e-3 * jax.random.normal(k3, (2048,))
+    res = lstsq.sketch_precond_lstsq(jax.random.PRNGKey(10), a, b)
+    x_ref, *_ = jnp.linalg.lstsq(a, b)
+    np.testing.assert_allclose(np.asarray(res.x), np.asarray(x_ref),
+                               rtol=1e-3, atol=1e-3)

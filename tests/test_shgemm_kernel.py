@@ -1,0 +1,111 @@
+"""Pallas SHGEMM kernel: shape/dtype sweep vs the pure-jnp oracle (ref.py),
+plus the accuracy-ladder invariants of DESIGN.md §2."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype=jnp.float32).astype(dtype)
+
+
+SHAPES = [
+    (8, 128, 128),      # single tile
+    (256, 512, 256),    # exact default blocks
+    (300, 700, 130),    # ragged: forces padding
+    (1, 128, 1),        # degenerate
+    (512, 1024, 48),    # skinny sketch width (the RandNLA case)
+]
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+@pytest.mark.parametrize("b_dtype", [jnp.bfloat16, jnp.float16])
+def test_kernel_matches_ref(m, k, n, b_dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(m * 7 + n))
+    a = _rand(k1, (m, k))
+    b = _rand(k2, (k, n), b_dtype)
+    got = ops.shgemm(a, b)
+    want = ref.shgemm_ref(a, b)
+    # identical math, different K-blocking order => tiny accumulation skew
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("terms", [1, 2, 3])
+def test_kernel_terms_match_ref(terms):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(terms))
+    a = _rand(k1, (256, 512))
+    b = _rand(k2, (512, 256), jnp.bfloat16)
+    got = ops.shgemm(a, b, terms=terms)
+    want = ref.shgemm_ref(a, b, terms=terms)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("blocks", [(8, 128, 128), (16, 256, 128),
+                                    (32, 128, 256)])
+def test_kernel_block_shape_sweep(blocks):
+    """Block shape must not change the result beyond accumulation order."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    a = _rand(k1, (64, 512))
+    b = _rand(k2, (512, 384), jnp.bfloat16)
+    got = ops.shgemm(a, b, blocks=blocks)
+    want = ref.shgemm_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_accuracy_ladder():
+    """1-term >> 2-term > f32-HIGHEST ~ 3-term vs the f64 oracle (Fig. 5)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    a = _rand(k1, (512, 1024))
+    b = _rand(k2, (1024, 256), jnp.bfloat16)
+    oracle = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+
+    def rel(c):
+        c = np.asarray(c, np.float64)
+        return np.linalg.norm(c - oracle) / np.linalg.norm(oracle)
+
+    e1 = rel(ops.shgemm(a, b, terms=1))
+    e2 = rel(ops.shgemm(a, b, terms=2))
+    e3 = rel(ops.shgemm(a, b, terms=3))
+    ef32 = rel(jnp.dot(a, b.astype(jnp.float32),
+                       precision=jax.lax.Precision.HIGHEST))
+    assert e1 > 100 * e2, (e1, e2)       # single-pass bf16 is the lossy one
+    assert e2 < 1e-5                      # 2-term: paper's "fp32-level" regime
+    assert e3 <= 2 * ef32                 # 3-term: true f32 accuracy
+
+
+def test_error_bound_eq49():
+    """Paper Eq. (49): |C - A.B| <~ c * n * u * |A||B| (bf16 constants)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(9))
+    n = 1024
+    a = _rand(k1, (128, n))
+    b = _rand(k2, (n, 128), jnp.bfloat16)
+    c = np.asarray(ops.shgemm(a, b), np.float64)
+    oracle = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+    absbound = np.abs(np.asarray(a, np.float64)) @ np.abs(np.asarray(b, np.float64))
+    # 2-term bf16 split carries ~16 bits => effective unit roundoff 2^-17;
+    # accumulation adds the n*u_f32 term.
+    u_eff = 2.0**-17
+    bound = (u_eff + n * 2.0**-24) * absbound
+    assert np.all(np.abs(c - oracle) <= 4.0 * bound)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(1, 80), k=st.integers(1, 300), n=st.integers(1, 80))
+def test_kernel_arbitrary_shapes(m, k, n):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(m + 83 * k + 7919 * n))
+    a = _rand(k1, (m, k))
+    b = _rand(k2, (k, n), jnp.bfloat16)
+    got = ops.shgemm(a, b)
+    want = ref.shgemm_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)

@@ -1,0 +1,353 @@
+"""Training/serving substrate: GaLore, gradient compression, checkpointing,
+data pipeline, train loop fault tolerance, serve engine."""
+
+import logging
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeCfg, smoke_config
+from repro.data.pipeline import MemmapTokens, SyntheticLM, write_token_file
+from repro.models import registry as R
+from repro.models import transformer as T
+from repro.optim import compression, galore
+from repro.optim.optimizers import adafactor, adamw
+from repro.serve.engine import Engine, Request
+from repro.serve import kv_compress
+from repro.train.checkpoint import CheckpointManager
+from repro.train.loop import LoopConfig, train
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+
+def _quadratic_problem(d=128, n=512, seed=0):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (n, d))
+    w_true = jax.random.normal(k2, (d, d)) / np.sqrt(d)
+    y = x @ w_true
+    params = {"w": jax.random.normal(k3, (d, d)) * 0.01}
+
+    def loss(p):
+        return jnp.mean((x @ p["w"] - y) ** 2)
+
+    return params, loss
+
+
+@pytest.mark.parametrize("make", [lambda: adamw(1e-2), lambda: adafactor(1e-2),
+                                  lambda: galore.galore(1e-2, rank=32,
+                                                        refresh_every=10)])
+def test_optimizers_descend(make):
+    params, loss = _quadratic_problem()
+    tx = make()
+    state = tx.init(params)
+    l0 = float(loss(params))
+
+    @jax.jit
+    def step(p, s):
+        l, g = jax.value_and_grad(loss)(p)
+        u, s = tx.update(g, s, p)
+        return jax.tree.map(jnp.add, p, u), s, l
+
+    for _ in range(60):
+        params, state, l = step(params, state)
+    assert float(l) < 0.2 * l0, (float(l), l0)
+
+
+def test_galore_memory_claim():
+    params = {"w1": jnp.zeros((4096, 1024)), "w2": jnp.zeros((1024, 4096)),
+              "b": jnp.zeros((1024,))}
+    adam_b, gal_b = galore.optimizer_state_bytes(params, rank=64)
+    assert gal_b < 0.2 * adam_b  # the r/d memory claim
+
+
+def test_galore_state_shapes_are_low_rank():
+    params = {"w": jnp.zeros((512, 256))}
+    tx = galore.galore(rank=32)
+    st = tx.init(params)
+    leaf = st["leaves"]["w"]
+    assert leaf.proj.shape == (512, 32)
+    assert leaf.m.shape == (32, 256)
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression
+# ---------------------------------------------------------------------------
+
+def test_compression_unbiased_over_time():
+    """Error feedback: the time-averaged compressed update converges to the
+    true gradient at the theoretical O((d/r)/T) rate."""
+    key = jax.random.PRNGKey(0)
+    g = {"w": jax.random.normal(key, (512, 64))}
+    state = compression.init_state(g)
+    steps, rank = 100, 64
+    acc = jnp.zeros_like(g["w"])
+    for _ in range(steps):
+        red, state = compression.compress_and_reduce(g, state, rank=rank)
+        acc = acc + red["w"]
+    rel = float(jnp.linalg.norm(acc / steps - g["w"])
+                / jnp.linalg.norm(g["w"]))
+    # residual at stationarity ~ (d/r - 1)|g|; averaged bias ~ that / steps
+    assert rel < 2.0 * (512 / rank) / steps, rel
+
+
+def test_compression_wire_bytes():
+    g = {"w": jnp.zeros((4096, 512)), "b": jnp.zeros((64,))}
+    full, comp = compression.wire_bytes(g, rank=32)
+    assert comp < 0.05 * full
+
+
+def test_compression_training_converges():
+    params, loss = _quadratic_problem(d=256)
+    tx = adamw(1e-2)
+    st = tx.init(params)
+    cstate = compression.init_state(params)
+
+    l0 = float(loss(params))
+    for _ in range(60):
+        _, g = jax.value_and_grad(loss)(params)
+        g, cstate = compression.compress_and_reduce(g, cstate, rank=64)
+        u, st = tx.update(g, st, params)
+        params = jax.tree.map(jnp.add, params, u)
+    assert float(loss(params)) < 0.3 * l0
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    tree = {"a": jnp.arange(12.0).reshape(3, 4),
+            "nested": {"b": jnp.ones((5,), jnp.int32)},
+            "tup": (jnp.zeros((2, 2)),)}
+    for s in (10, 20, 30):
+        mgr.save(s, jax.tree.map(lambda x: x + s, tree))
+    mgr.wait()
+    assert mgr.latest_step() == 30
+    # keep=2 garbage collection
+    assert not (tmp_path / "step_10").exists()
+    restored, step = mgr.restore(tree)
+    assert step == 30
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.arange(12.0).reshape(3, 4) + 30)
+    mgr.close()
+
+
+def test_checkpoint_atomic_no_partial(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, {"w": jnp.ones((4,))}, blocking=True)
+    # a stale tmp dir from a "crashed" save must not shadow the real one
+    (tmp_path / "step_2.tmp").mkdir()
+    assert mgr.latest_step() == 1
+    mgr.close()
+
+
+def test_checkpoint_restore_resharded_subprocess(tmp_path):
+    """Write on 1 device, restore onto an 8-device mesh (elastic path)."""
+    import subprocess, sys, textwrap
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(5, {"w": jnp.arange(64.0).reshape(8, 8)}, blocking=True)
+    mgr.close()
+    script = textwrap.dedent(f"""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.train.checkpoint import CheckpointManager
+        mesh = jax.make_mesh((8,), ("data",))
+        mgr = CheckpointManager({str(tmp_path)!r})
+        tpl = {{"w": jnp.zeros((8, 8))}}
+        restored, step = mgr.restore(tpl, mesh=mesh, specs={{"w": P("data")}})
+        assert step == 5
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      np.arange(64.0).reshape(8, 8))
+        assert len(restored["w"].sharding.device_set) == 8
+        print("RESHARD_OK")
+    """)
+    env = dict(os.environ, PYTHONPATH="src",
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=300,
+                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "RESHARD_OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+def test_synthetic_data_deterministic():
+    d1 = SyntheticLM(vocab=100, seq_len=16, global_batch=4, seed=7)
+    d2 = SyntheticLM(vocab=100, seq_len=16, global_batch=4, seed=7)
+    b1, b2 = d1.batch(42), d2.batch(42)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].max() < 100
+    # labels are next-token shifted
+    np.testing.assert_array_equal(
+        d1.batch(3)["tokens"][:, 1:], d1.batch(3)["labels"][:, :-1])
+
+
+def test_memmap_tokens(tmp_path):
+    path = tmp_path / "toks.bin"
+    write_token_file(path, np.arange(10_000) % 257)
+    d = MemmapTokens(path, seq_len=32, global_batch=4)
+    b = d.batch(0)
+    assert b["tokens"].shape == (4, 32)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_host_sharded_batches_disjoint():
+    hosts = [SyntheticLM(vocab=50, seq_len=8, global_batch=8, seed=1,
+                         host_id=h, num_hosts=2) for h in range(2)]
+    b0, b1 = hosts[0].batch(5), hosts[1].batch(5)
+    assert b0["tokens"].shape == (4, 8)
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# Train loop fault tolerance
+# ---------------------------------------------------------------------------
+
+def _tiny_setup():
+    cfg = smoke_config(R.get_arch("qwen3-0.6b"))
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    step = jax.jit(R.make_train_step(cfg, lr=1e-3))
+    opt = R.make_train_step(cfg).init_opt(params)
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=16, global_batch=4)
+    return cfg, params, opt, step, data
+
+
+def test_train_loop_runs_and_checkpoints(tmp_path):
+    cfg, params, opt, step, data = _tiny_setup()
+    lcfg = LoopConfig(total_steps=6, ckpt_every=3, ckpt_dir=str(tmp_path))
+    p2, o2, hist = train(step, params, opt, data, lcfg)
+    assert len(hist) == 6
+    assert (tmp_path / "step_6").exists()
+
+
+def test_train_loop_resumes(tmp_path):
+    cfg, params, opt, step, data = _tiny_setup()
+    lcfg = LoopConfig(total_steps=4, ckpt_every=2, ckpt_dir=str(tmp_path))
+    train(step, params, opt, data, lcfg)
+    # second run resumes at 4 and continues to 7
+    lcfg2 = LoopConfig(total_steps=7, ckpt_every=2, ckpt_dir=str(tmp_path))
+    _, _, hist = train(step, params, opt, data, lcfg2)
+    assert hist[0]["step"] == 5 and hist[-1]["step"] == 7
+
+
+def test_train_loop_retries_transient_failure(tmp_path, caplog):
+    cfg, params, opt, step, data = _tiny_setup()
+    calls = {"n": 0}
+
+    def flaky_step(p, o, b):
+        calls["n"] += 1
+        if calls["n"] == 3:
+            raise RuntimeError("simulated preemption")
+        return step(p, o, b)
+
+    lcfg = LoopConfig(total_steps=5, ckpt_every=2, ckpt_dir=str(tmp_path))
+    with caplog.at_level(logging.WARNING):
+        _, _, hist = train(flaky_step, params, opt, data, lcfg)
+    assert len(hist) == 5
+    assert any("failed" in r.message for r in caplog.records)
+
+
+# ---------------------------------------------------------------------------
+# Serve engine
+# ---------------------------------------------------------------------------
+
+def test_engine_batched_decode_completes():
+    cfg = smoke_config(R.get_arch("qwen3-0.6b"))
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, slots=2, max_seq=64)
+    reqs = [Request(rid=i, prompt=[1 + i, 2, 3], max_new=5) for i in range(4)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    for r in reqs:
+        assert r.done and len(r.out) >= 5
+        assert all(0 <= t < cfg.vocab for t in r.out)
+
+
+def test_engine_matches_raw_decode():
+    """Engine greedy decode == hand-rolled prefill+decode for one request."""
+    cfg = smoke_config(R.get_arch("qwen3-0.6b"))
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = [5, 7, 11]
+    eng = Engine(cfg, params, slots=2, max_seq=64)
+    req = Request(rid=0, prompt=list(prompt), max_new=4)
+    eng.submit(req)
+    eng.run()
+
+    toks = list(prompt)
+    out = T.forward(cfg, params, jnp.asarray([toks], jnp.int32))
+    ref = [int(jnp.argmax(out.logits[0, -1]))]
+    for _ in range(3):
+        out = T.forward(cfg, params, jnp.asarray([toks + ref], jnp.int32))
+        ref.append(int(jnp.argmax(out.logits[0, -1])))
+    assert req.out[:4] == ref, (req.out, ref)
+
+
+# ---------------------------------------------------------------------------
+# KV compression (beyond-paper application)
+# ---------------------------------------------------------------------------
+
+def test_kv_compress_lowrank_cache():
+    key = jax.random.PRNGKey(0)
+    # synthetically low-rank K history
+    u = jax.random.normal(key, (256, 8))
+    v = jax.random.normal(jax.random.fold_in(key, 1), (8, 64))
+    k_hist = (u @ v).astype(jnp.bfloat16)
+    f = kv_compress.compress_matrix(jax.random.PRNGKey(2), k_hist, rank=16)
+    err = float(kv_compress.compression_error(k_hist, f))
+    assert err < 1e-2, err
+    # factored scores match materialized scores
+    q = jax.random.normal(jax.random.fold_in(key, 3), (4, 64))
+    s_fact = kv_compress.factored_scores(q, f)
+    s_full = q @ kv_compress.reconstruct(f).T
+    np.testing.assert_allclose(np.asarray(s_fact), np.asarray(s_full),
+                               rtol=1e-3, atol=1e-2)
+
+
+@pytest.mark.parametrize("arch", ["gemma2-2b", "recurrentgemma-2b",
+                                  "deepseek-v2-lite-16b", "whisper-large-v3"])
+def test_engine_other_cache_families(arch):
+    """Continuous batching across the window / recurrent / MLA-latent /
+    enc-dec cache families (greedy decode vs full-forward reference)."""
+    cfg = smoke_config(R.get_arch(arch))
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    if cfg.encdec:
+        pytest.skip("engine drives decoder-only prompts; whisper needs "
+                    "encoder features per request (serve_step covered by "
+                    "test_arch_smoke)")
+    eng = Engine(cfg, params, slots=2, max_seq=48)
+    prompt = [3, 5, 7]
+    req = Request(rid=0, prompt=list(prompt), max_new=3)
+    eng.submit(req)
+    eng.run()
+    assert req.done and len(req.out) >= 3
+
+    toks = list(prompt)
+    ref = []
+    for _ in range(3):
+        out = T.forward(cfg, params, jnp.asarray([toks + ref], jnp.int32))
+        ref.append(int(jnp.argmax(out.logits[0, -1])))
+    assert req.out[:3] == ref, (arch, req.out, ref)
+
+
+def test_checkpoint_explicit_step_restore(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=5)
+    for s in (1, 2, 3):
+        mgr.save(s, {"w": jnp.full((4,), float(s))}, blocking=True)
+    restored, step = mgr.restore({"w": jnp.zeros((4,))}, step=2)
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.full((4,), 2.0))
+    mgr.close()
