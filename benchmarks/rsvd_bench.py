@@ -45,7 +45,7 @@ def fig7_accuracy(n=1024, p=64) -> list:
     for mname, (a, bound) in mats.items():
         base = None
         for method in ("f32", "lowp_single", "shgemm", "shgemm3",
-                       "shgemm_pallas"):
+                       "shgemm_pallas", "shgemm_fused"):
             errs = []
             for seed in range(3):
                 res = rsvd_mod.rsvd(jax.random.PRNGKey(10 + seed), a, p,

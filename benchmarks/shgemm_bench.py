@@ -1,7 +1,10 @@
-"""Paper Fig. 5 (SHGEMM accuracy) and Fig. 6 (throughput).
+"""Paper Fig. 5 (SHGEMM accuracy) and Fig. 6 (throughput), plus the fused
+zero-HBM sketch and the block autotuner.
 
 Accuracy runs exactly as the paper: relative Frobenius error vs an f64
-oracle, A ~ N(0,1) or U(0,1), B ~ N(0,1) in low precision.
+oracle, A ~ N(0,1) or U(0,1), B ~ N(0,1) in low precision.  The fused-RNG
+kernel is measured against the f64 oracle of its own (bit-identically
+materialized) Omega stream.
 
 Throughput on this CPU-only container has two faces:
   * measured: XLA-CPU wall time of the f32 baseline vs the 1/2/3-term MXU
@@ -9,20 +12,31 @@ Throughput on this CPU-only container has two faces:
   * derived: the TPU v5e roofline model (MXU passes / peak) — 6-pass f32
     emulation vs 2-pass SHGEMM gives the paper's predicted speedup, reported
     in the derived column (this is the number EXPERIMENTS.md quotes).
+
+Side effect: ``run()`` writes BENCH_shgemm.json (machine-readable: method,
+shape, wall ms, modeled HBM bytes) at the repo root so the perf trajectory
+is tracked across PRs — the fused rows must show Omega bytes = 0.
 """
 
 from __future__ import annotations
 
 import functools
+import json
+import os
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import row, time_jit
-from repro.core.projection import project
-from repro.kernels import ops, ref
+from repro.core.projection import fused_omega, project
+from repro.kernels import autotune, ops, ref
+from repro.kernels.shgemm_fused import hbm_bytes_modeled
 from repro.launch.mesh import HBM_BW, PEAK_BF16_FLOPS
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_shgemm.json")
 
 
 def fig5_accuracy(k_sizes=(256, 1024, 4096)) -> list:
@@ -52,6 +66,22 @@ def fig5_accuracy(k_sizes=(256, 1024, 4096)) -> list:
             ]:
                 rows.append(row(f"fig5.{dist}.k{k}.{name}", 0.0,
                                 f"rel_err={rel(fn()):.3e}"))
+
+            # fused zero-HBM sketch: error vs the f64 oracle of its own
+            # Omega stream, and the acceptance ratio vs the materialized
+            # path on the SAME Omega.
+            b_f = fused_omega(kb, (k, n), dtype=jnp.bfloat16)
+            oracle_f = np.asarray(a, np.float64) @ np.asarray(b_f, np.float64)
+            def rel_f(c):
+                return float(np.linalg.norm(np.asarray(c, np.float64)
+                                            - oracle_f)
+                             / np.linalg.norm(oracle_f))
+            e_fused = rel_f(ops.shgemm_fused(a, kb, n))
+            e_mat = rel_f(project(a, b_f, method="shgemm"))
+            rows.append(row(
+                f"fig5.{dist}.k{k}.shgemm_fused", 0.0,
+                f"rel_err={e_fused:.3e};"
+                f"vs_materialized={e_fused / max(e_mat, 1e-30):.3f}x"))
     return rows
 
 
@@ -114,5 +144,65 @@ def pallas_block_sweep() -> list:
     return rows
 
 
+def autotune_demo(m=256, n=128, k=512) -> list:
+    """Autotuner round-trip on a small shape: first call sweeps (interpret
+    mode wall times — structural on CPU), second call must hit the cache.
+
+    Uses a repo-local cache file so the bench leaves no state outside the
+    tree (the library default is ~/.cache/repro/autotune.json)."""
+    cache_file = os.path.join(os.path.dirname(BENCH_JSON),
+                              ".autotune_cache.json")
+    if os.path.exists(cache_file):
+        os.remove(cache_file)  # fresh sweep every bench run
+    cands = [(128, 128, 128), (128, 128, 256), (256, 128, 256)]
+    rows = []
+    t0 = time.perf_counter()
+    blocks, hit = autotune.autotune_blocks(m, n, k, candidates=cands,
+                                           cache_file=cache_file)
+    t_sweep = time.perf_counter() - t0
+    rows.append(row(f"autotune.{m}x{n}x{k}.sweep", t_sweep * 1e6,
+                    f"blocks={'x'.join(map(str, blocks))};cache_hit={hit}"))
+    t0 = time.perf_counter()
+    blocks2, hit2 = autotune.autotune_blocks(m, n, k, candidates=cands,
+                                             cache_file=cache_file)
+    t_hit = time.perf_counter() - t0
+    rows.append(row(f"autotune.{m}x{n}x{k}.revisit", t_hit * 1e6,
+                    f"blocks={'x'.join(map(str, blocks2))};cache_hit={hit2}"))
+    return rows
+
+
+def bench_json(sizes=((2048, 128, 2048), (1024, 64, 1024))) -> list:
+    """Measured fused vs materialized wall time + modeled HBM bytes, written
+    to BENCH_shgemm.json.  The fused rows' modeled traffic is A+C alone —
+    omega_bytes must be 0 (the acceptance criterion this PR is about)."""
+    records = []
+    rows = []
+    key = jax.random.PRNGKey(3)
+    for (m, n, k) in sizes:
+        a = jax.random.normal(jax.random.fold_in(key, m), (m, k), jnp.float32)
+        omega = fused_omega(jax.random.fold_in(key, m + 1), (k, n),
+                            dtype=jnp.bfloat16)
+        kk = jax.random.fold_in(key, m + 1)
+        us_mat = time_jit(lambda a, o: ops.shgemm(a, o), a, omega)
+        us_fus = time_jit(lambda a, kk_: ops.shgemm_fused(a, kk_, n), a, kk)
+        for method, us, fused in (("shgemm", us_mat, False),
+                                  ("shgemm_fused", us_fus, True)):
+            total = hbm_bytes_modeled(m, n, k, fused=fused)
+            omega_bytes = 0 if fused else k * n * 2
+            records.append({
+                "method": method, "m": m, "n": n, "k": k,
+                "wall_ms": round(us / 1e3, 4),
+                "hbm_bytes_modeled": total,
+                "omega_bytes_modeled": omega_bytes,
+            })
+            rows.append(row(f"bench_json.{method}.{m}x{n}x{k}", us,
+                            f"hbm_bytes={total};omega_bytes={omega_bytes}"))
+    with open(BENCH_JSON, "w") as f:
+        json.dump(records, f, indent=1)
+    rows.append(row("bench_json.written", 0.0, BENCH_JSON))
+    return rows
+
+
 def run() -> list:
-    return fig5_accuracy() + fig6_throughput() + pallas_block_sweep()
+    return (fig5_accuracy() + fig6_throughput() + pallas_block_sweep()
+            + autotune_demo() + bench_json())

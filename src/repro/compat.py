@@ -1,0 +1,29 @@
+"""Cross-version jax API shims.
+
+The repo targets the current jax line but must also run on 0.4.x (the CPU CI
+image):
+
+  * ``shard_map`` moved from ``jax.experimental.shard_map`` to
+    ``jax.shard_map`` and renamed its ``check_rep`` kwarg to ``check_vma``;
+  * Pallas' ``TPUCompilerParams`` was renamed ``CompilerParams``
+    (shimmed in kernels/shgemm.py, closer to its only users).
+"""
+
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+if "check_vma" in inspect.signature(_shard_map).parameters:
+    shard_map = _shard_map
+else:
+    def shard_map(f, **kw):
+        if "check_vma" in kw:
+            kw["check_rep"] = kw.pop("check_vma")
+        return _shard_map(f, **kw)

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core.projection import ProjectionMethod, gaussian, project
 
 
@@ -67,7 +68,7 @@ def distributed_range_finder(key, a: jax.Array, p_hat: int, mesh: Mesh, *,
         q, _ = _tsqr(y, data_axis)
         return q
 
-    return jax.shard_map(
+    return compat.shard_map(
         fn, mesh=mesh,
         in_specs=(P(data_axis, model_axis), P(model_axis, None)),
         out_specs=P(data_axis, None), check_vma=False,
@@ -117,7 +118,7 @@ def distributed_rsvd(key, a: jax.Array, rank: int, mesh: Mesh, *,
         u = jnp.dot(q, u_b, preferred_element_type=jnp.float32)
         return u[:, :rank], s[:rank], vt_blk[:rank, :]
 
-    u, s, vt = jax.shard_map(
+    u, s, vt = compat.shard_map(
         fn, mesh=mesh,
         in_specs=(P(data_axis, model_axis), P(model_axis, None)),
         out_specs=(P(data_axis, None), P(), P(None, model_axis)),

@@ -61,8 +61,11 @@ def rp_hosvd(key: jax.Array, a: jax.Array, ranks: tuple[int, ...], *,
     factors = []
     for i in range(a.ndim):
         unf = unfold(a, i)                       # (I_i, prod I_k)
-        omega = proj.gaussian(keys[i], (unf.shape[1], ranks[i]), dtype=omega_dtype)
-        w = proj.project(unf, omega, method=method)  # line 2 — the hot GEMM
+        # line 2 — the hot GEMM; key-based so method="shgemm_fused" streams
+        # Omega_(i) out of the hash instead of HBM (it is the *largest*
+        # operand here: prod_{k!=i} I_k rows).
+        w = proj.sketch(keys[i], unf, ranks[i], method=method,
+                        omega_dtype=omega_dtype)
         q, _ = jnp.linalg.qr(w)                  # line 3
         factors.append(q)
     core = a
@@ -82,8 +85,8 @@ def rp_sthosvd(key: jax.Array, a: jax.Array, ranks: tuple[int, ...], *,
     factors = []
     for i in range(a.ndim):
         unf = unfold(core, i)
-        omega = proj.gaussian(keys[i], (unf.shape[1], ranks[i]), dtype=omega_dtype)
-        w = proj.project(unf, omega, method=method)
+        w = proj.sketch(keys[i], unf, ranks[i], method=method,
+                        omega_dtype=omega_dtype)
         q, _ = jnp.linalg.qr(w)
         factors.append(q)
         core = mode_dot(core, q.T, i)

@@ -40,9 +40,11 @@ def sketch_precond_lstsq(key: jax.Array, a: jax.Array, b: jax.Array, *,
     """
     m, n = a.shape
     c = min(sketch_factor * n, m)
-    omega = proj.gaussian(key, (m, c), dtype=jnp.bfloat16)
-    # (c, n) sketch: (A^T Omega)^T via the mixed-precision projection.
-    ya = proj.project(a.T, omega, method=method).T
+    # (c, n) sketch: (A^T Omega)^T via the mixed-precision projection —
+    # key-based, so method="shgemm_fused" never materializes the (m, c)
+    # Omega (the largest array in this solver after A itself).
+    ya = proj.sketch(key, a.T, c, method=method,
+                     omega_dtype=jnp.bfloat16).T
     _, r = jnp.linalg.qr(ya)  # R: (n, n) preconditioner
 
     def solve_r(v):  # x = R^-1 v

@@ -10,6 +10,12 @@ Methods:
   * ``shgemm``       — the paper's method: A split hi+lo, Omega in bf16/fp16,
                        two MXU passes, f32-level accuracy (Eq. 40).
   * ``shgemm_pallas``— same math via the Pallas TPU kernel (kernels/shgemm.py).
+  * ``shgemm_fused`` — zero-HBM sketching: Omega is generated inside the
+                       Pallas kernel from a PRNG key (kernels/shgemm_fused.py)
+                       and never materialized — use ``sketch`` (key-based)
+                       rather than ``project`` (Omega-based) to get the
+                       benefit; ``project`` with this method falls back to
+                       the materialized Pallas kernel.
 
 Random matrices: Gaussian (stored f32/bf16/fp16), Achlioptas sparse {-1,0,+1}
 (Eq. 5), very-sparse (Li et al.).
@@ -26,7 +32,8 @@ import jax.numpy as jnp
 from repro.core.splitting import FP16_INV_SCALE, split_fp32
 
 ProjectionMethod = Literal["f32", "lowp_single", "shgemm", "shgemm3",
-                           "shgemm_pallas"]
+                           "shgemm_pallas", "shgemm_fused"]
+SketchDist = Literal["gaussian", "achlioptas", "very_sparse"]
 
 
 # ---------------------------------------------------------------------------
@@ -69,6 +76,21 @@ def very_sparse(key: jax.Array, shape: tuple[int, ...], dtype=jnp.bfloat16) -> j
     """Li et al. very sparse projection: s = sqrt(n)."""
     n = shape[0]
     return achlioptas_sparse(key, shape, s=float(jnp.sqrt(n)), dtype=dtype)
+
+
+def fused_omega(key: jax.Array, shape: tuple[int, int], *,
+                dist: SketchDist = "gaussian", s: float | None = None,
+                dtype=jnp.bfloat16) -> jax.Array:
+    """Materialize the exact Omega the fused kernel generates in VMEM.
+
+    Bit-identical to the in-kernel stream (counter-based hash on the global
+    element lattice — kernels/shgemm_fused.py's determinism contract), so
+    consumers that need Omega downstream of the sketch (Nystrom, gradient
+    compression) can pair it with a ``shgemm_fused`` projection, and tests
+    can compare fused vs materialized paths exactly.
+    """
+    from repro.kernels import shgemm_fused as _f  # deferred: core stays light
+    return _f.reference_omega(key, shape, dist=dist, s=s, dtype=dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -121,7 +143,43 @@ def project(a: jax.Array, omega: jax.Array,
         hi, mid, lo = split_fp32_bf16_3(a)
         b = omega.astype(jnp.bfloat16)
         return (_dot_mxu(hi, b) + _dot_mxu(mid, b) + _dot_mxu(lo, b))
-    if method == "shgemm_pallas":
+    if method in ("shgemm_pallas", "shgemm_fused"):
+        # With a materialized Omega there is nothing left to fuse: the fused
+        # method degrades gracefully to the materialized Pallas kernel.
         from repro.kernels import ops  # deferred: keeps core import-light
         return ops.shgemm(a.astype(jnp.float32), omega)
     raise ValueError(f"unknown projection method {method!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("p", "method", "dist",
+                                             "omega_dtype"))
+def sketch(key: jax.Array, a: jax.Array, p: int, *,
+           method: ProjectionMethod = "shgemm",
+           dist: SketchDist = "gaussian",
+           omega_dtype=jnp.bfloat16) -> jax.Array:
+    """Y = A @ Omega(key)[a.shape[1], p] without the caller materializing
+    Omega.
+
+    This is the key-based front door for all RandNLA consumers (rsvd, hosvd,
+    lstsq, galore):
+
+      * ``method="shgemm_fused"`` — Omega costs zero HBM bytes: tiles are
+        hashed into VMEM inside the Pallas kernel.
+      * any other method — Omega is generated with the classic jax.random
+        stream exactly as the consumers did before and fed to ``project``,
+        so legacy results are unchanged.
+    """
+    if method == "shgemm_fused":
+        from repro.kernels import ops
+        return ops.shgemm_fused(a.astype(jnp.float32), key, p, dist=dist,
+                                omega_dtype=omega_dtype)
+    shape = (a.shape[1], p)
+    if dist == "gaussian":
+        omega = gaussian(key, shape, dtype=omega_dtype)
+    elif dist == "achlioptas":
+        omega = achlioptas_sparse(key, shape, dtype=omega_dtype)
+    elif dist == "very_sparse":
+        omega = very_sparse(key, shape, dtype=omega_dtype)
+    else:
+        raise ValueError(f"unknown sketch distribution {dist!r}")
+    return project(a, omega, method=method)

@@ -43,10 +43,11 @@ def rsvd(key: jax.Array, a: jax.Array, rank: int, *, oversample: int = 10,
     """
     m, n = a.shape
     p_hat = min(rank + oversample, min(m, n))
-    omega = proj.gaussian(key, (n, p_hat), dtype=omega_dtype)
 
-    # Line 1: Y = A . Omega — THE mixed-precision projection.
-    y = proj.project(a, omega, method=method)
+    # Line 1: Y = A . Omega — THE mixed-precision projection.  Key-based:
+    # with method="shgemm_fused" Omega is generated inside the kernel and
+    # never materialized (zero HBM bytes for the random matrix).
+    y = proj.sketch(key, a, p_hat, method=method, omega_dtype=omega_dtype)
 
     # Power scheme: re-orthonormalize between passes for stability.
     for _ in range(power_iters):
@@ -74,8 +75,7 @@ def range_finder(key: jax.Array, a: jax.Array, rank: int, *, oversample: int = 1
     """Return Q with orthonormal columns s.t. A ~ Q Q^T A (Eq. 3)."""
     m, n = a.shape
     p_hat = min(rank + oversample, min(m, n))
-    omega = proj.gaussian(key, (n, p_hat), dtype=omega_dtype)
-    y = proj.project(a, omega, method=method)
+    y = proj.sketch(key, a, p_hat, method=method, omega_dtype=omega_dtype)
     q, _ = jnp.linalg.qr(y)
     return q
 
@@ -113,8 +113,16 @@ def nystrom_eigh(key: jax.Array, a: jax.Array, rank: int, *,
     """
     n = a.shape[0]
     p_hat = min(rank + oversample, n)
-    omega = proj.gaussian(key, (n, p_hat), dtype=omega_dtype)
-    y = proj.project(a, omega, method=method)             # (n, p_hat)
+    # Nystrom reuses Omega downstream (shift + Gram), so it must exist in
+    # HBM; with the fused method the hot GEMM still skips the Omega reads
+    # and fused_omega reproduces the identical in-kernel stream for the
+    # small downstream terms.
+    if method == "shgemm_fused":
+        omega = proj.fused_omega(key, (n, p_hat), dtype=omega_dtype)
+    else:
+        omega = proj.gaussian(key, (n, p_hat), dtype=omega_dtype)
+    y = proj.sketch(key, a, p_hat, method=method,
+                    omega_dtype=omega_dtype)              # (n, p_hat)
     nu = jnp.sqrt(jnp.asarray(n, jnp.float32)) * 1e-6 * jnp.linalg.norm(y)
     y = y + nu * omega.astype(jnp.float32)
     g = _dot(omega.astype(jnp.float32).T, y)

@@ -1,8 +1,12 @@
 """Pallas TPU kernels for the performance-critical GEMMs.
 
-shgemm.py — pl.pallas_call split-precision GEMM (the paper's §4 kernel,
-            TPU-adapted); ops.py — public jit wrappers; ref.py — pure-jnp
-            oracles used by the allclose tests.
+shgemm.py       — pl.pallas_call split-precision GEMM (the paper's §4 kernel,
+                  TPU-adapted);
+shgemm_fused.py — fused RNG+SHGEMM: Omega generated in VMEM, zero HBM bytes
+                  for the random matrix (DESIGN.md §9);
+autotune.py     — block-size sweep + persistent JSON cache;
+ops.py          — public jit wrappers; ref.py — pure-jnp oracles used by the
+                  allclose tests.
 """
 
-from repro.kernels import ops, ref, shgemm
+from repro.kernels import autotune, ops, ref, shgemm, shgemm_fused

@@ -4,6 +4,14 @@
 dispatches to the Pallas kernel (interpret=True automatically on CPU), strips
 padding.  This is the drop-in used by core/projection.py's "shgemm_pallas"
 method and by the serving/optimizer layers.
+
+``shgemm_fused(a, key, n)`` is the zero-HBM-Omega variant: the random matrix
+is generated inside the kernel from ``key`` (kernels/shgemm_fused.py), so the
+projection's HBM traffic is A reads + C writes alone.
+
+Block selection for both goes through ``kernels/autotune.py``: tuned blocks
+from the persistent cache when the shape has been autotuned, otherwise the
+shrink-to-fit heuristic.
 """
 
 from __future__ import annotations
@@ -13,7 +21,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune as _tune
 from repro.kernels import shgemm as _k
+from repro.kernels import shgemm_fused as _kf
 
 
 def _on_tpu() -> bool:
@@ -28,21 +38,17 @@ def _pad_to(x: jax.Array, m0: int, m1: int) -> jax.Array:
     return x
 
 
-def _pick_blocks(m: int, n: int, k: int) -> tuple[int, int, int]:
-    """Shrink default blocks for small problems (still 128-aligned where the
-    dims allow; tiny dims fall back to the dim itself rounded to 8/128)."""
-    def shrink(dim, default, align):
-        if dim >= default:
-            return default
-        # round dim up to alignment, at most default
-        return min(default, max(align, ((dim + align - 1) // align) * align))
-    bm = shrink(m, _k.DEFAULT_BM, 8)
-    bn = shrink(n, _k.DEFAULT_BN, 128)
-    bk = shrink(k, _k.DEFAULT_BK, 128)
-    return bm, bn, bk
-
-
 @functools.partial(jax.jit, static_argnames=("blocks", "terms", "interpret"))
+def _shgemm_padded(a, b, blocks, terms, interpret):
+    bm, bn, bk = blocks
+    m, n = a.shape[0], b.shape[1]
+    ap = _pad_to(a, bm, bk)
+    bp = _pad_to(b, bk, bn)
+    c = _k.shgemm_pallas(ap, bp, bm=bm, bn=bn, bk=bk, terms=terms,
+                         interpret=interpret)
+    return c[:m, :n]
+
+
 def shgemm(a: jax.Array, b: jax.Array, *, blocks: tuple[int, int, int] | None = None,
            terms: int = 2, interpret: bool | None = None) -> jax.Array:
     """C_f32 = A_f32 @ B_lowp for arbitrary shapes.
@@ -50,6 +56,11 @@ def shgemm(a: jax.Array, b: jax.Array, *, blocks: tuple[int, int, int] | None = 
     B may be bf16 (TPU-native) or fp16 (paper-faithful path).  A is cast to
     f32 if needed.  On non-TPU backends the kernel runs in interpret mode
     (Python evaluation of the kernel body) for bit-accurate validation.
+
+    Block resolution happens OUTSIDE the jit boundary (the wrapper itself is
+    not jitted; the padded kernel call is): jit retraces when the resolved
+    blocks change, so autotune cache updates take effect on the next call
+    instead of being baked into a stale trace.
     """
     a = a.astype(jnp.float32)
     if b.dtype not in (jnp.bfloat16, jnp.float16):
@@ -60,17 +71,56 @@ def shgemm(a: jax.Array, b: jax.Array, *, blocks: tuple[int, int, int] | None = 
         raise ValueError(f"contraction mismatch: {a.shape} @ {b.shape}")
     if interpret is None:
         interpret = not _on_tpu()
-    bm, bn, bk = blocks if blocks is not None else _pick_blocks(m, n, k)
-    ap = _pad_to(a, bm, bk)
-    bp = _pad_to(b, bk, bn)
-    c = _k.shgemm_pallas(ap, bp, bm=bm, bn=bn, bk=bk, terms=terms,
-                         interpret=interpret)
-    return c[:m, :n]
+    if blocks is None:
+        blocks = _tune.pick_blocks(m, n, k, b_dtype=b.dtype, terms=terms)
+    return _shgemm_padded(a, b, tuple(blocks), terms, interpret)
 
 
 def shgemm_nt(a: jax.Array, b_t: jax.Array, **kw) -> jax.Array:
     """C = A @ B_t^T (B stored transposed, e.g. row-major random matrices)."""
     return shgemm(a, b_t.T, **kw)
+
+
+def shgemm_fused(a: jax.Array, key: jax.Array, n: int, *,
+                 dist: str = "gaussian", omega_dtype=jnp.bfloat16,
+                 blocks: tuple[int, int, int] | None = None, terms: int = 2,
+                 s: float | None = None,
+                 interpret: bool | None = None) -> jax.Array:
+    """C_f32 = A_f32 @ Omega(key)[k, n] with Omega generated in-kernel.
+
+    Arbitrary shapes: A is zero-padded to block multiples; pad rows of A null
+    the extra generated Omega rows and pad columns are sliced off, so the
+    result is independent of the padding (and of the block shape — see the
+    determinism contract in kernels/shgemm_fused.py).
+
+    ``omega_dtype`` may be an fp8 format: samples are rounded through fp8 in
+    the kernel and consumed as bf16 by the MXU, matching
+    ``project(a, fused_omega(key, ..., dtype=fp8))`` exactly (fp8 Omega is
+    storage-only everywhere in this repo).  Like ``shgemm``, block
+    resolution runs outside the jit boundary so autotune updates apply.
+    """
+    a = a.astype(jnp.float32)
+    m, k = a.shape
+    store_dtype = jnp.dtype(omega_dtype).type
+    if store_dtype in (jnp.float8_e4m3fn, jnp.float8_e5m2):
+        compute_dtype = jnp.bfloat16  # e8m7 superset of both fp8 formats
+    elif store_dtype in (jnp.bfloat16, jnp.float16):
+        compute_dtype = store_dtype
+    else:
+        raise TypeError(f"omega_dtype must be bf16/fp16/fp8, got {omega_dtype}")
+    if interpret is None:
+        interpret = not _on_tpu()
+    if blocks is None:
+        blocks = _tune.pick_blocks(m, n, k, b_dtype=compute_dtype,
+                                   terms=terms, fused=True)
+    bm, bn, bk = blocks
+    n_pad = n + (-n) % bn
+    c = _kf.shgemm_fused_pallas(
+        _pad_to(a, bm, bk), _kf.key_words(key), n_pad, bm=bm, bn=bn, bk=bk,
+        terms=terms, dist=dist, s=_kf._resolve_s(dist, s, k),
+        store_dtype=store_dtype, lowp_dtype=compute_dtype,
+        interpret=interpret)
+    return c[:m, :n]
 
 
 def flash_attention(q, k, v, *, causal: bool = True, scale=None,

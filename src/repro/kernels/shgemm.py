@@ -30,6 +30,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.splitting import FP16_INV_SCALE, FP16_SCALE
 
+# jax renamed ``TPUCompilerParams`` -> ``CompilerParams``; support both so the
+# kernel builds across the 0.4.x / 0.5.x line.
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 # Default tile sizes: MXU is 128x128; (8, 128) f32 VMEM tiling.  (256,256,512)
 # keeps the working set ~1.1 MB (~2.2 MB double-buffered) << 16 MB VMEM while
 # amortizing the VPU split over a deep K tile.  See EXPERIMENTS.md §Perf for
@@ -101,15 +105,24 @@ def shgemm_pallas(a: jax.Array, b: jax.Array, *, bm: int = DEFAULT_BM,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
     )(a, b)
 
 
-def vmem_bytes(bm: int, bn: int, bk: int, b_dtype=jnp.bfloat16) -> int:
+def vmem_bytes(bm: int, bn: int, bk: int, b_dtype=jnp.bfloat16,
+               fused: bool = False) -> int:
     """Claimed VMEM working set for a block configuration (double-buffered
-    in/out blocks + single accumulator)."""
-    b_bytes = 2
+    in/out blocks + single accumulator).
+
+    ``fused``: the fused-RNG kernel (shgemm_fused.py) streams no B block from
+    HBM, but holds the generated tile (f32 scratch pre-rounding) in VMEM,
+    single-buffered.
+    """
+    b_bytes = jnp.dtype(b_dtype).itemsize
+    if fused:
+        return (2 * (bm * bk * 4 + bm * bn * 4) + bm * bn * 4
+                + bk * bn * (4 + b_bytes))
     return 2 * (bm * bk * 4 + bk * bn * b_bytes + bm * bn * 4) + bm * bn * 4

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.launch import dryrun as DR
 from repro.launch import mesh as mesh_mod
 
@@ -34,7 +35,7 @@ def main(d: int = 8192, cols: int = 4096, rank: int = 64):
     def raw(g):
         def f(gl):
             return jax.lax.psum(gl, "pod")
-        return jax.shard_map(f, mesh=mesh,
+        return compat.shard_map(f, mesh=mesh,
                              in_specs=P(None, ("data", "model")),
                              out_specs=P(None, ("data", "model")),
                              check_vma=False)(g)
@@ -47,7 +48,7 @@ def main(d: int = 8192, cols: int = 4096, rank: int = 64):
             sk = jnp.dot(q.astype(jnp.bfloat16).T.astype(jnp.float32), gl)
             sk = jax.lax.psum(sk, "pod")          # rank-r rows on the wire
             return jnp.dot(q, sk)
-        return jax.shard_map(f, mesh=mesh,
+        return compat.shard_map(f, mesh=mesh,
                              in_specs=P(None, ("data", "model")),
                              out_specs=P(None, ("data", "model")),
                              check_vma=False)(g)

@@ -118,6 +118,14 @@ def collective_bytes(hlo_text: str) -> dict[str, int]:
     return out
 
 
+def _cost_dict(cost) -> dict:
+    """cost_analysis() returns a dict on current jax but a one-element list
+    of dicts on 0.4.x — normalize to a dict."""
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
 def flops_probe(cfg, shape, micro_batches: int) -> dict:
     """Lower (no compile) an UNROLLED, unsharded variant and read
     lowered.cost_analysis() — the only way to see through scan bodies.
@@ -136,7 +144,7 @@ def flops_probe(cfg, shape, micro_batches: int) -> dict:
         abs_params = T.abstract_params(probe_cfg)
         specs = R.input_specs(probe_cfg, shape)
         lowered = jax.jit(step).lower(abs_params, specs)
-    cost = lowered.cost_analysis() or {}
+    cost = _cost_dict(lowered.cost_analysis())
     return {"global_flops": cost.get("flops"),
             "note": "unrolled unsharded probe; micro_batches=1"}
 
@@ -208,7 +216,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     # NOTE (verified empirically): under SPMD, cost_analysis() FLOPs/bytes and
     # memory_analysis() sizes are PER-DEVICE; collective shapes in as_text()
     # are per-device too.  Roofline terms therefore do NOT divide by chips.
-    cost = compiled.cost_analysis() or {}
+    cost = _cost_dict(compiled.cost_analysis())
     try:
         mem = compiled.memory_analysis()
         mem_stats = {

@@ -23,7 +23,8 @@ from typing import Any, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.projection import ProjectionMethod, gaussian, project
+from repro.core.projection import (ProjectionMethod, fused_omega, gaussian,
+                                   project)
 
 
 class CompressionState(NamedTuple):
@@ -59,8 +60,18 @@ def compress_and_reduce(grads, state: CompressionState, *, rank: int = 32,
             return (jax.lax.psum(g, axis_name) if axis_name else g), None
         d = g.shape[0]
         r = min(rank, d)
-        omega = gaussian(jax.random.fold_in(key, i), (d, r),
-                         dtype=jnp.float32)
+        # Omega is regenerated from the shared seed on every host; hosts in
+        # a DP group run the same binary on the same backend, so either
+        # generator agrees across the group.  The fused method's counter
+        # stream (kernels/shgemm_fused.py) additionally does not change
+        # between jax releases (the jax.random Gaussian stream may), which
+        # matters for error-feedback state carried across restarts/upgrades.
+        if method == "shgemm_fused":
+            omega = fused_omega(jax.random.fold_in(key, i), (d, r),
+                                dtype=jnp.float32)
+        else:
+            omega = gaussian(jax.random.fold_in(key, i), (d, r),
+                             dtype=jnp.float32)
         # Orthonormalize so (I - QQ^T) is a contraction — raw Omega Omega^T/r
         # has spectral radius (1+sqrt(d/r))^2 and the EF residual diverges.
         # Q is then stored/applied in bf16: the projection Q^T acc is the

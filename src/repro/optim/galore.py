@@ -9,7 +9,10 @@ gradient.
 
 This is the paper's technique as a first-class training feature: the RSVD
 range-finder (Alg. 1 lines 1-2) runs inside the training step, with the
-O(d_out * d_in * r) projection GEMM in mixed precision.
+O(d_out * d_in * r) projection GEMM in mixed precision.  With
+``method="shgemm_fused"`` the range-finder's Omega is generated inside the
+Pallas kernel (kernels/shgemm_fused.py) — zero HBM bytes for the random
+matrix on every basis refresh.
 """
 
 from __future__ import annotations

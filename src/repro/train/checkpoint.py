@@ -35,7 +35,11 @@ def _flatten(tree, prefix="") -> dict[str, Any]:
     if isinstance(tree, dict):
         for k, v in tree.items():
             out.update(_flatten(v, f"{prefix}{k}/"))
-    elif isinstance(tree, (tuple, list)):
+    elif isinstance(tree, (tuple, list)) and not isinstance(
+            tree, jax.sharding.PartitionSpec):
+        # PartitionSpec subclasses tuple on jax<=0.4.x — it is a leaf here,
+        # or a specs tree {'w': P('data')} would flatten into {'w/0': 'data'}
+        # and restore() would silently skip the resharding placement.
         for i, v in enumerate(tree):
             out.update(_flatten(v, f"{prefix}{i}/"))
     elif tree is None:

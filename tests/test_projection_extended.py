@@ -1,11 +1,14 @@
 """Extended projection tests: fp8 Omega (beyond-paper §3.2 follow-through),
-sparse random matrices, property-based invariants."""
+sparse random matrices.
+
+Property-based (hypothesis) variants live in test_property_based.py so this
+module runs even where hypothesis is not installed.
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import projection as proj
 from repro.core import rsvd
@@ -59,12 +62,11 @@ def test_very_sparse_density():
     assert 0.5 / 64 < density < 2.0 / 64
 
 
-@settings(max_examples=10, deadline=None)
-@given(n=st.integers(64, 256), p=st.integers(8, 32),
-       seed=st.integers(0, 2**30))
+@pytest.mark.parametrize("n,p,seed", [(64, 8, 0), (256, 32, 1729)])
 def test_projection_methods_agree(n, p, seed):
     """shgemm / shgemm3 / pallas projections of the same Omega agree to
-    split-precision tolerance."""
+    split-precision tolerance (fixed-seed stand-in for the hypothesis
+    sweep in test_property_based.py)."""
     key = jax.random.PRNGKey(seed)
     a = jax.random.normal(key, (n, n), jnp.float32)
     omega = proj.gaussian(jax.random.fold_in(key, 1), (n, p))
@@ -76,10 +78,8 @@ def test_projection_methods_agree(n, p, seed):
     assert float(jnp.max(jnp.abs(y2 - yp))) / scale < 1e-4
 
 
-@settings(max_examples=10, deadline=None)
-@given(seed=st.integers(0, 2**30))
-def test_rounded_gaussian_symmetry(seed):
+def test_rounded_gaussian_symmetry():
     """RN rounding keeps the distribution symmetric: mean ~ 0 (paper §3.2.3)."""
-    g = proj.gaussian(jax.random.PRNGKey(seed), (4096,), dtype=jnp.bfloat16)
+    g = proj.gaussian(jax.random.PRNGKey(17), (4096,), dtype=jnp.bfloat16)
     m = float(jnp.mean(g.astype(jnp.float32)))
     assert abs(m) < 5.0 / np.sqrt(4096)

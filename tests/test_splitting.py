@@ -1,57 +1,52 @@
-"""Property tests for the f32 mantissa splitting (paper Eq. 37-38, 43-44)."""
+"""Tests for the f32 mantissa splitting (paper Eq. 37-38, 43-44).
+
+Property-based (hypothesis) residual-bound sweeps live in
+test_property_based.py; here are fixed-value versions plus the overflow-mode
+contrast, so the module runs even where hypothesis is not installed.
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
 
 from repro.core import splitting
 
 jax.config.update("jax_platform_name", "cpu")
 
-# Normalized-range magnitudes (the paper's Eq. 44 bounds assume normalized
-# values; denormals have reduced relative precision by construction).
-_mag_f32 = st.floats(min_value=1e-30, max_value=1e30, allow_nan=False,
-                     allow_infinity=False)
-_sign = st.sampled_from([-1.0, 1.0])
-finite_f32 = st.builds(lambda m, s: m * s, _mag_f32, _sign)
+# Spans the normalized f32 range incl. awkward points (near-bf16-midpoints,
+# tiny/huge magnitudes, both signs).
+_FIXED = np.array([1.0, -1.0, 1e-30, -1e30, 3.14159265, -2.7182818,
+                   65504.0, 1.0009765625, -1.0000001, 6e4, 1e-2,
+                   123456.789, -0.333333343], dtype=np.float32)
 
 
-@settings(max_examples=50, deadline=None)
-@given(st.lists(finite_f32, min_size=1, max_size=64))
-def test_bf16_split_residual_bound(xs):
+def test_bf16_split_residual_bound():
     """|a - hi - lo| <= u_bf16^2 * |a| (Eq. 44's A_Delta bound, bf16 form)."""
-    a = jnp.asarray(xs, dtype=jnp.float32)
+    a = jnp.asarray(_FIXED)
     hi, lo = splitting.split_fp32_bf16(a)
     resid = np.abs(np.asarray(a - splitting.merge_split(hi, lo)))
     u = 2.0**-8  # bf16 unit roundoff
-    assert np.all(resid <= u * u * np.abs(np.asarray(a)) + 1e-38)
+    assert np.all(resid <= u * u * np.abs(_FIXED) + 1e-38)
 
 
-@settings(max_examples=50, deadline=None)
-@given(st.lists(st.builds(lambda m, s: m * s,
-                          st.floats(min_value=1e-2, max_value=6e4,
-                                    allow_nan=False), _sign),
-                min_size=1, max_size=64))
-def test_fp16_split_residual_bound(xs):
+def test_fp16_split_residual_bound():
     """Paper Eq. (44): |A_Delta| <= u_f16^2 |A| for in-range values."""
-    a = jnp.asarray(xs, dtype=jnp.float32)
+    in_range = _FIXED[(np.abs(_FIXED) >= 1e-2) & (np.abs(_FIXED) <= 6e4)]
+    a = jnp.asarray(in_range)
     hi, lo = splitting.split_fp32_fp16(a)
     resid = np.abs(np.asarray(a - splitting.merge_split(hi, lo)))
     u = 2.0**-11
-    assert np.all(resid <= u * u * np.abs(np.asarray(a)) + 1e-30)
+    assert np.all(resid <= u * u * np.abs(in_range) + 1e-30)
 
 
-@settings(max_examples=30, deadline=None)
-@given(st.lists(finite_f32, min_size=1, max_size=64))
-def test_bf16_3term_strictly_better(xs):
-    a = jnp.asarray(xs, dtype=jnp.float32)
+def test_bf16_3term_strictly_better():
+    a = jnp.asarray(_FIXED)
     hi, mid, lo = splitting.split_fp32_bf16_3(a)
     r3 = np.abs(np.asarray(
         a - hi.astype(jnp.float32) - mid.astype(jnp.float32)
         - lo.astype(jnp.float32)))
     u = 2.0**-8
-    assert np.all(r3 <= u**3 * np.abs(np.asarray(a)) + 1e-38)
+    assert np.all(r3 <= u**3 * np.abs(_FIXED) + 1e-38)
 
 
 def test_fp16_overflow_mode():

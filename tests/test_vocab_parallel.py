@@ -46,11 +46,13 @@ _SCRIPT = textwrap.dedent("""
         assert rel < 2e-2, (k, rel)
     print("VP_OK", float(l_ref), float(l_vp))
 
-    # also with TP on
+    # also with TP on.  Looser than the VP check: TP reassociates the bf16
+    # contraction over the model axis (same reason as the gradient check
+    # above), which lands ~1e-4 relative on XLA-CPU.
     A.set_mesh(mesh, tp=True)
     l_tp = loss(params, batch)
     A.set_mesh(None)
-    np.testing.assert_allclose(float(l_ref), float(l_tp), rtol=2e-5)
+    np.testing.assert_allclose(float(l_ref), float(l_tp), rtol=5e-4)
     print("TP_OK")
 """)
 
