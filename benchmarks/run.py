@@ -12,7 +12,7 @@ def main() -> None:
     jax.config.update("jax_platform_name", "cpu")
 
     from benchmarks import (hosvd_bench, integration_bench, paper_tables,
-                            roofline, rsvd_bench, shgemm_bench)
+                            roofline, rsvd_bench, shgemm_bench, stream_bench)
     from benchmarks.common import print_rows
 
     suites = [
@@ -21,6 +21,7 @@ def main() -> None:
         ("rsvd", rsvd_bench.run),                # Fig 7, Fig 8
         ("hosvd", hosvd_bench.run),              # Fig 9
         ("integration", integration_bench.run),  # galore/compression/kv/e2e
+        ("stream", stream_bench.run),            # streaming sketch engine
         ("roofline", roofline.run),              # dry-run derived table
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None

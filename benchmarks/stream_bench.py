@@ -1,0 +1,159 @@
+"""Streaming sketch engine benchmark: update throughput (tiles/sec) and the
+memory story (peak resident bytes vs one-shot sketching), plus streamed-rSVD
+wall time vs the in-core path.
+
+Wall times on this CPU-only container are structural (Pallas interpret
+mode); the load-bearing numbers are the modeled peak-bytes ratios — the
+whole point of repro.stream is that a matrix that never fits in device
+memory is sketched one tile at a time while the state stays O(n·p).
+
+Side effect: ``run()`` writes BENCH_stream.json at the repo root (same
+contract as BENCH_shgemm.json) so the perf trajectory is tracked across
+PRs.  ``python -m benchmarks.stream_bench --smoke`` runs a seconds-scale
+shape for the CI smoke step and asserts the streamed/one-shot bit-identity
+invariant end to end.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_jit
+from repro import stream
+from repro.core import projection as proj
+from repro.core import rsvd
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_stream.json")
+
+
+def peak_bytes_modeled(m: int, n: int, p: int, tile: int, *,
+                       left: bool, l: int = 0) -> tuple[int, int]:
+    """(streamed, one_shot) peak resident bytes for the sketch phase:
+    one-shot holds all of A plus Y; streaming holds one tile plus the
+    sketch state (Y, optionally W) — Omega is zero bytes either way on the
+    fused path."""
+    state = m * p * 4 + (l * n * 4 if left else 0)
+    streamed = tile * n * 4 + state
+    one_shot = m * n * 4 + m * p * 4
+    return streamed, one_shot
+
+
+def update_throughput(shapes=((2048, 512, 64, 256), (4096, 256, 32, 512)),
+                      records=None) -> list:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for (m, n, p, tile) in shapes:
+        a = jax.random.normal(jax.random.fold_in(key, m), (m, n),
+                              jnp.float32)
+        st = stream.init(key, n, p, max_rows=m, method="shgemm_fused")
+
+        def one_tile(st, blk):
+            return stream.update(st, blk, st.rows_seen)
+
+        us_tile = time_jit(jax.jit(one_tile), st, a[:tile])
+        us_oneshot = time_jit(
+            jax.jit(lambda a_: proj.sketch(key, a_, p,
+                                           method="shgemm_fused")), a)
+        tiles_sec = 1e6 / us_tile
+        pb_s, pb_1 = peak_bytes_modeled(m, n, p, tile, left=False)
+        rows.append(row(
+            f"stream.update.{m}x{n}.p{p}.t{tile}", us_tile,
+            f"tiles_per_sec={tiles_sec:.1f};"
+            f"peak_bytes_stream={pb_s};peak_bytes_oneshot={pb_1};"
+            f"mem_ratio={pb_1 / pb_s:.2f}x"))
+        rows.append(row(f"stream.oneshot.{m}x{n}.p{p}", us_oneshot,
+                        f"stream_total_us={us_tile * (m // tile):.0f}"))
+        if records is not None:
+            records.append({
+                "kind": "update", "m": m, "n": n, "p": p, "tile": tile,
+                "us_per_tile": round(us_tile, 2),
+                "tiles_per_sec": round(tiles_sec, 2),
+                "oneshot_us": round(us_oneshot, 2),
+                "peak_bytes_stream": pb_s,
+                "peak_bytes_oneshot": pb_1,
+            })
+    return rows
+
+
+def rsvd_streamed_bench(n=1024, rank=32, tile=128, records=None) -> list:
+    rows = []
+    key = jax.random.PRNGKey(1)
+    a = rsvd.matrix_with_singular_values(
+        key, n, rsvd.singular_values_exp(n, rank, 1e-4))
+    us_1 = time_jit(lambda: rsvd.rsvd(key, a, rank, method="shgemm_fused"))
+    err_1 = float(rsvd.reconstruction_error(
+        a, rsvd.rsvd(key, a, rank, method="shgemm_fused")))
+
+    def streamed():
+        return rsvd.rsvd_streamed(
+            key, lambda: (a[i:i + tile] for i in range(0, n, tile)), rank,
+            n_rows=n, n_cols=n, method="shgemm_fused")
+
+    us_s = time_jit(streamed)
+    err_s = float(rsvd.reconstruction_error(a, streamed()))
+    p_hat = rank + 10
+    pb_s, pb_1 = peak_bytes_modeled(n, n, p_hat, tile, left=False)
+    rows.append(row(f"stream.rsvd.{n}.r{rank}.t{tile}", us_s,
+                    f"oneshot_us={us_1:.0f};err={err_s:.3e};"
+                    f"err_oneshot={err_1:.3e};"
+                    f"mem_ratio={pb_1 / pb_s:.2f}x"))
+    if records is not None:
+        records.append({
+            "kind": "rsvd_streamed", "n": n, "rank": rank, "tile": tile,
+            "us": round(us_s, 2), "oneshot_us": round(us_1, 2),
+            "err": err_s, "err_oneshot": err_1,
+            "peak_bytes_stream": pb_s, "peak_bytes_oneshot": pb_1,
+        })
+    return rows
+
+
+def run() -> list:
+    records = []
+    rows = update_throughput(records=records) + rsvd_streamed_bench(
+        records=records)
+    with open(BENCH_JSON, "w") as f:
+        json.dump(records, f, indent=1)
+    rows.append(row("stream.bench_json.written", 0.0, BENCH_JSON))
+    return rows
+
+
+def smoke() -> None:
+    """CI smoke: tiny shape, interpret mode, asserts the bit-identity
+    invariant (streamed rows == one-shot sketch) and that the streamed
+    rSVD matches the in-core error — seconds, not minutes."""
+    key = jax.random.PRNGKey(0)
+    m, n, p, tile = 128, 96, 16, 32
+    a = jax.random.normal(jax.random.fold_in(key, 1), (m, n), jnp.float32)
+    st = stream.init(key, n, p, max_rows=m, method="shgemm_fused")
+    for off in range(0, m, tile):
+        st = stream.update(st, a[off:off + tile], off)
+    oneshot = proj.sketch(key, a, p, method="shgemm_fused")
+    np.testing.assert_array_equal(np.asarray(st.y), np.asarray(oneshot))
+
+    rank = 8
+    res_s = rsvd.rsvd_streamed(key, lambda: (a[i:i + tile]
+                                             for i in range(0, m, tile)),
+                               rank, n_rows=m, n_cols=n,
+                               method="shgemm_fused")
+    err_s = float(rsvd.reconstruction_error(a, res_s))
+    err_1 = float(rsvd.reconstruction_error(
+        a, rsvd.rsvd(key, a, rank, method="shgemm_fused")))
+    assert abs(err_s - err_1) <= 1e-5, (err_s, err_1)
+    print(f"stream smoke OK: bit-identity held, streamed err {err_s:.3e} "
+          f"vs one-shot {err_1:.3e}")
+
+
+if __name__ == "__main__":
+    jax.config.update("jax_platform_name", "cpu")
+    if "--smoke" in sys.argv:
+        smoke()
+    else:
+        from benchmarks.common import print_rows
+        print_rows(run())

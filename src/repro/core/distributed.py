@@ -43,6 +43,23 @@ def _local_project(a_blk, om_blk, method: ProjectionMethod, model_axis: str):
     return jax.lax.psum(y, model_axis)
 
 
+def _local_sketch_fused(a_blk, key2, p_hat: int, model_axis: str,
+                        omega_dtype=jnp.bfloat16):
+    """Per-shard fused projection: this device's Omega row-block is generated
+    **in-kernel** from (key, global column offset) — zero HBM bytes and zero
+    collectives for the random matrix (DESIGN.md §9/§10).  The generated
+    block is bit-identical to ``fused_omega(key, (n, p_hat))[off:off+n_loc]``
+    (the counter hash depends only on global indices), so the shard-local
+    GEMM matches the materialized-slice path bit for bit.
+    """
+    from repro.kernels import ops  # deferred: keeps core import-light
+    n_loc = a_blk.shape[1]
+    off = jax.lax.axis_index(model_axis) * n_loc
+    y = ops.shgemm_fused(a_blk.astype(jnp.float32), key2, p_hat,
+                         omega_dtype=omega_dtype, row_offset=off)
+    return jax.lax.psum(y, model_axis)
+
+
 def _tsqr(y_blk: jax.Array, data_axis: str) -> tuple[jax.Array, jax.Array]:
     """Tall-skinny QR across the data axis.  y_blk: (m_local, p)."""
     p = y_blk.shape[1]
@@ -59,7 +76,28 @@ def distributed_range_finder(key, a: jax.Array, p_hat: int, mesh: Mesh, *,
                              omega_dtype=jnp.bfloat16,
                              data_axis: str = "data",
                              model_axis: str = "model") -> jax.Array:
-    """Q (m, p_hat), rows sharded over data, s.t. A ~ Q Q^T A."""
+    """Q (m, p_hat), rows sharded over data, s.t. A ~ Q Q^T A.
+
+    With ``method="shgemm_fused"`` no Omega is materialized anywhere: each
+    device hashes exactly its row-block out of the counter stream inside the
+    kernel (``_local_sketch_fused``).  Other methods keep the legacy
+    host-materialized jax.random Omega bit for bit.
+    """
+    from repro.kernels import shgemm_fused as _kf
+
+    if method == "shgemm_fused":
+        def fn_fused(a_blk, key2):
+            y = _local_sketch_fused(a_blk, key2, p_hat, model_axis,
+                                    omega_dtype=omega_dtype)
+            q, _ = _tsqr(y, data_axis)
+            return q
+
+        return compat.shard_map(
+            fn_fused, mesh=mesh,
+            in_specs=(P(data_axis, model_axis), P(None, None)),
+            out_specs=P(data_axis, None), check_vma=False,
+        )(a, _kf.key_words(key))
+
     n = a.shape[1]
     omega = gaussian(key, (n, p_hat), dtype=omega_dtype)
 
@@ -87,14 +125,30 @@ def distributed_rsvd(key, a: jax.Array, rank: int, mesh: Mesh, *,
     than (m_local x n_local) per device or p_hat^2 replicated.
 
     power_iters: q passes of the (A A^T)^q power scheme (paper §2.1) — each
-    pass is two sharded GEMMs + a TSQR re-orthogonalization."""
+    pass is two sharded GEMMs + a TSQR re-orthogonalization.
+
+    ``method="shgemm_fused"`` generates each shard's Omega row-block
+    in-kernel from (key, global offset) — nothing is materialized, sharded,
+    or communicated for the random matrix; all other methods keep the
+    legacy materialized Omega path unchanged."""
+    from repro.kernels import shgemm_fused as _kf
+
     m, n = a.shape
     p_hat = min(rank + oversample, min(m, n))
-    omega = gaussian(key, (n, p_hat), dtype=jnp.bfloat16)
+    fused = method == "shgemm_fused"
+    if fused:
+        aux = _kf.key_words(key)                       # (1, 2) replicated
+        aux_spec = P(None, None)
+    else:
+        aux = gaussian(key, (n, p_hat), dtype=jnp.bfloat16)
+        aux_spec = P(model_axis, None)
 
-    def fn(a_blk, om_blk):
+    def fn(a_blk, aux_blk):
         # Lines 1-2: projection + TSQR over data.
-        y = _local_project(a_blk, om_blk, method, model_axis)
+        if fused:
+            y = _local_sketch_fused(a_blk, aux_blk, p_hat, model_axis)
+        else:
+            y = _local_project(a_blk, aux_blk, method, model_axis)
         q, _ = _tsqr(y, data_axis)                     # (m_loc, p_hat)
         for _ in range(power_iters):
             # z = A^T q : (n_loc, p_hat), psum over data
@@ -120,10 +174,10 @@ def distributed_rsvd(key, a: jax.Array, rank: int, mesh: Mesh, *,
 
     u, s, vt = compat.shard_map(
         fn, mesh=mesh,
-        in_specs=(P(data_axis, model_axis), P(model_axis, None)),
+        in_specs=(P(data_axis, model_axis), aux_spec),
         out_specs=(P(data_axis, None), P(), P(None, model_axis)),
         check_vma=False,
-    )(a, omega)
+    )(a, aux)
     return ShardedSVD(u, s, vt)
 
 

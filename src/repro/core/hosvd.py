@@ -93,6 +93,33 @@ def rp_sthosvd(key: jax.Array, a: jax.Array, ranks: tuple[int, ...], *,
     return TuckerResult(core, tuple(factors))
 
 
+def rp_sthosvd_streamed(key: jax.Array, slabs, dims, ranks, *,
+                        method: proj.ProjectionMethod = "shgemm_fused",
+                        dist: proj.SketchDist = "gaussian",
+                        omega_dtype=jnp.bfloat16) -> TuckerResult:
+    """Single-pass streaming Tucker of a tensor that arrives as slabs along
+    axis 0 (out-of-core tensors, token/frame streams).
+
+    ``slabs`` is an iterable of ``A[off:off+b, ...]`` slabs in order, tiling
+    axis 0 exactly; ``dims`` is the full tensor shape.  Never holds more
+    than one slab plus the O(sum_i I_i·J_i) sketch state — the per-mode
+    Omega_i (whose row count is prod_{j!=i} I_j, the *largest* object in
+    one-shot RP-HOSVD) is regenerated block-wise in-kernel and never
+    materialized (repro.stream.tucker).
+    """
+    from repro import stream  # deferred: stream imports this module
+    ts = stream.tucker_init(key, dims, ranks, method=method, dist=dist,
+                            omega_dtype=omega_dtype)
+    off = 0
+    for slab in slabs:
+        ts = stream.tucker_update(ts, slab, off)
+        off += slab.shape[0]
+    if off != dims[0]:
+        raise ValueError(f"slabs cover {off} rows of axis 0, expected "
+                         f"{dims[0]}")
+    return stream.tucker_finalize(ts)
+
+
 def reconstruct(res: TuckerResult) -> jax.Array:
     t = res.core
     for i, q in enumerate(res.factors):

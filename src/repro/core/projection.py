@@ -78,6 +78,21 @@ def very_sparse(key: jax.Array, shape: tuple[int, ...], dtype=jnp.bfloat16) -> j
     return achlioptas_sparse(key, shape, s=float(jnp.sqrt(n)), dtype=dtype)
 
 
+def materialize_omega(key: jax.Array, shape: tuple[int, int], *,
+                      dist: SketchDist = "gaussian",
+                      dtype=jnp.bfloat16) -> jax.Array:
+    """The legacy jax.random Omega for ``dist`` — the single dispatch shared
+    by ``sketch`` and the streaming subsystem's non-fused partial-width
+    updates (repro.stream), so the two can never draw different streams."""
+    if dist == "gaussian":
+        return gaussian(key, shape, dtype=dtype)
+    if dist == "achlioptas":
+        return achlioptas_sparse(key, shape, dtype=dtype)
+    if dist == "very_sparse":
+        return very_sparse(key, shape, dtype=dtype)
+    raise ValueError(f"unknown sketch distribution {dist!r}")
+
+
 def fused_omega(key: jax.Array, shape: tuple[int, int], *,
                 dist: SketchDist = "gaussian", s: float | None = None,
                 dtype=jnp.bfloat16) -> jax.Array:
@@ -173,13 +188,6 @@ def sketch(key: jax.Array, a: jax.Array, p: int, *,
         from repro.kernels import ops
         return ops.shgemm_fused(a.astype(jnp.float32), key, p, dist=dist,
                                 omega_dtype=omega_dtype)
-    shape = (a.shape[1], p)
-    if dist == "gaussian":
-        omega = gaussian(key, shape, dtype=omega_dtype)
-    elif dist == "achlioptas":
-        omega = achlioptas_sparse(key, shape, dtype=omega_dtype)
-    elif dist == "very_sparse":
-        omega = very_sparse(key, shape, dtype=omega_dtype)
-    else:
-        raise ValueError(f"unknown sketch distribution {dist!r}")
+    omega = materialize_omega(key, (a.shape[1], p), dist=dist,
+                              dtype=omega_dtype)
     return project(a, omega, method=method)

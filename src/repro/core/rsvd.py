@@ -67,6 +67,75 @@ def rsvd(key: jax.Array, a: jax.Array, rank: int, *, oversample: int = 10,
     return SVDResult(u[:, :rank], s[:rank], vt[:rank, :])
 
 
+def rsvd_streamed(key: jax.Array, a_blocks, rank: int, *, n_rows: int,
+                  n_cols: int, oversample: int = 10, passes: int = 2,
+                  method: proj.ProjectionMethod = "shgemm_fused",
+                  omega_dtype=jnp.bfloat16,
+                  tile_callback=None) -> SVDResult:
+    """Randomized SVD of an out-of-core matrix streamed as row tiles.
+
+    ``a_blocks`` is an iterable of row tiles (in order, tiling the matrix
+    exactly), or a zero-arg callable returning one — pass a callable (or a
+    replayable sequence) for the default two-pass variant, which needs to
+    see the tiles twice.  Never holds more than one tile of A plus
+    O((m+n)·p) sketch/factor state (Y and Q are (n_rows, p_hat); B and the
+    single-pass W are p-by-n — p/n of A, but not m-free for tall
+    matrices); the sketch accumulates through ``repro.stream``,
+    so Omega costs zero HBM bytes with ``method="shgemm_fused"`` and each
+    tile's sketch rows are bit-identical to one-shot sketching of the
+    concatenated matrix.
+
+    passes=2 (default): stream the sketch, orthonormalize to Q, then replay
+    the tiles once to accumulate B = Q^T A — numerically identical to
+    ``rsvd`` up to f32 summation order (its exact Line-3 computation,
+    tiled).  passes=1: strict single pass, finalized from the (Y, W)
+    sketches alone (Tropp et al. 2017) — slightly looser accuracy, for
+    streams that cannot be replayed.
+
+    ``tile_callback(i, n_seen_rows)``, if given, is invoked per absorbed
+    tile (progress/bookkeeping for multi-hour out-of-core runs).
+    """
+    from repro import stream  # deferred: stream imports this module's result
+    if passes not in (1, 2):
+        raise ValueError(f"passes must be 1 or 2, got {passes}")
+    if passes == 2 and not callable(a_blocks) and iter(a_blocks) is a_blocks:
+        # fail BEFORE streaming: a bare generator would be consumed by the
+        # first pass and the error would otherwise land hours into an
+        # out-of-core run
+        raise ValueError(
+            "passes=2 must replay the tile stream: pass a sequence or a "
+            "zero-arg callable returning a fresh iterator (or use passes=1 "
+            "for the strict single-pass finalizer)")
+
+    def tiles():
+        it = a_blocks() if callable(a_blocks) else a_blocks
+        off = 0
+        for i, blk in enumerate(it):
+            yield i, off, blk
+            off += blk.shape[0]
+        if off != n_rows:
+            raise ValueError(f"tiles cover {off} rows, expected {n_rows}")
+
+    p_hat = min(rank + oversample, min(n_rows, n_cols))
+    state = stream.init(key, n_cols, p_hat, max_rows=n_rows,
+                        left=(passes == 1), method=method,
+                        omega_dtype=omega_dtype)
+    for i, off, blk in tiles():
+        state = stream.update(state, blk, off)
+        if tile_callback is not None:
+            tile_callback(i, off + blk.shape[0])
+    if passes == 1:
+        return stream.svd(state, rank)
+
+    q = stream.range_basis(state)                      # (n_rows, p_hat)
+    b = jnp.zeros((p_hat, n_cols), jnp.float32)
+    for _, off, blk in tiles():                        # Line 3, tiled
+        b = b + _dot(q[off:off + blk.shape[0]].T, blk.astype(jnp.float32))
+    u_b, s, vt = jnp.linalg.svd(b, full_matrices=False)
+    u = _dot(q, u_b)
+    return SVDResult(u[:, :rank], s[:rank], vt[:rank, :])
+
+
 @functools.partial(jax.jit, static_argnames=("rank", "oversample", "method",
                                              "omega_dtype"))
 def range_finder(key: jax.Array, a: jax.Array, rank: int, *, oversample: int = 10,

@@ -20,6 +20,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import autotune as _tune
 from repro.kernels import shgemm as _k
@@ -81,10 +82,25 @@ def shgemm_nt(a: jax.Array, b_t: jax.Array, **kw) -> jax.Array:
     return shgemm(a, b_t.T, **kw)
 
 
+def _validate_offset(name: str, value, unit: int) -> None:
+    """Block-alignment check for concrete offsets (clear error, per the
+    streaming contract DESIGN.md §10).  Traced offsets skip the check — the
+    caller (repro.stream) owns the alignment discipline there."""
+    if isinstance(value, (int, np.integer)):
+        if value < 0:
+            raise ValueError(f"{name}={value} must be >= 0")
+        if value % unit:
+            raise ValueError(
+                f"{name}={value} is not a multiple of the {unit}-wide kernel "
+                f"block on that axis; streamed tiles must be block-aligned "
+                f"with the one-shot lattice (pass blocks=... explicitly to "
+                f"pick a compatible tiling, or align the offset)")
+
+
 def shgemm_fused(a: jax.Array, key: jax.Array, n: int, *,
                  dist: str = "gaussian", omega_dtype=jnp.bfloat16,
                  blocks: tuple[int, int, int] | None = None, terms: int = 2,
-                 s: float | None = None,
+                 s: float | None = None, row_offset=0, col_offset=0,
                  interpret: bool | None = None) -> jax.Array:
     """C_f32 = A_f32 @ Omega(key)[k, n] with Omega generated in-kernel.
 
@@ -98,6 +114,17 @@ def shgemm_fused(a: jax.Array, key: jax.Array, n: int, *,
     ``project(a, fused_omega(key, ..., dtype=fp8))`` exactly (fp8 Omega is
     storage-only everywhere in this repo).  Like ``shgemm``, block
     resolution runs outside the jit boundary so autotune updates apply.
+
+    ``row_offset``/``col_offset`` shift the generated Omega's global index
+    lattice: the call consumes ``Omega(key)[row_offset:row_offset+k,
+    col_offset:col_offset+n]`` of the one-shot random matrix without ever
+    materializing or slicing it — the primitive behind repro.stream and the
+    per-shard Omega row-blocks in core/distributed.py.  Concrete int offsets
+    must be multiples of the resolved (bk, bn) so streamed accumulation
+    tiles the one-shot K-chunking exactly; traced offsets (scan carries)
+    are accepted unchecked.  NOTE: for ``dist="very_sparse"`` with a
+    nonzero row_offset, pass the global ``s`` explicitly (the default is
+    derived from this call's local k).
     """
     a = a.astype(jnp.float32)
     m, k = a.shape
@@ -114,12 +141,16 @@ def shgemm_fused(a: jax.Array, key: jax.Array, n: int, *,
         blocks = _tune.pick_blocks(m, n, k, b_dtype=compute_dtype,
                                    terms=terms, fused=True)
     bm, bn, bk = blocks
+    _validate_offset("row_offset", row_offset, bk)
+    _validate_offset("col_offset", col_offset, bn)
+    offsets = jnp.stack([jnp.asarray(row_offset, jnp.int32),
+                         jnp.asarray(col_offset, jnp.int32)]).reshape(1, 2)
     n_pad = n + (-n) % bn
     c = _kf.shgemm_fused_pallas(
         _pad_to(a, bm, bk), _kf.key_words(key), n_pad, bm=bm, bn=bn, bk=bk,
         terms=terms, dist=dist, s=_kf._resolve_s(dist, s, k),
         store_dtype=store_dtype, lowp_dtype=compute_dtype,
-        interpret=interpret)
+        offsets=offsets, interpret=interpret)
     return c[:m, :n]
 
 

@@ -130,24 +130,31 @@ def _resolve_s(dist: str, s: float | None, k: int) -> float:
 
 def reference_omega(key: jax.Array, shape: tuple[int, int], *,
                     dist: str = "gaussian", s: float | None = None,
-                    dtype=jnp.float32) -> jax.Array:
+                    dtype=jnp.float32, row_offset=0, col_offset=0) -> jax.Array:
     """Materialize the exact Omega the fused kernel consumes (oracle path).
 
     Used by the agreement tests, by consumers that need Omega downstream
     anyway (Nystrom, gradient compression), and by anyone who wants the
     fused stream without the fused kernel.
+
+    ``row_offset``/``col_offset`` (int or traced scalar) shift the global
+    element lattice: the result equals ``reference_omega(key, big)[r0:, c0:]``
+    restricted to ``shape`` — the block-regeneration property the streaming
+    subsystem (repro.stream) is built on.
     """
     k, n = shape
     kw = key_words(key)
-    rows = jnp.arange(k, dtype=jnp.int32)[:, None]
-    cols = jnp.arange(n, dtype=jnp.int32)[None, :]
+    rows = (jnp.arange(k, dtype=jnp.int32)[:, None]
+            + jnp.asarray(row_offset, jnp.int32))
+    cols = (jnp.arange(n, dtype=jnp.int32)[None, :]
+            + jnp.asarray(col_offset, jnp.int32))
     vals = sample_tile(kw[0, 0], kw[0, 1], rows, cols, dist=dist,
                        s=_resolve_s(dist, s, k))
     return vals.astype(dtype)
 
 
-def _fused_kernel(key_ref, a_ref, o_ref, acc_ref, *, store_dtype, lowp_dtype,
-                  terms, dist, s, bn, bk):
+def _fused_kernel(key_ref, offs_ref, a_ref, o_ref, acc_ref, *, store_dtype,
+                  lowp_dtype, terms, dist, s, bn, bk):
     """One (bm, bn) output tile over the sequential K axis; the B tile is
     hashed into existence in VMEM instead of streamed from HBM."""
     @pl.when(pl.program_id(2) == 0)
@@ -157,10 +164,12 @@ def _fused_kernel(key_ref, a_ref, o_ref, acc_ref, *, store_dtype, lowp_dtype,
     k0 = key_ref[0, 0]
     k1 = key_ref[0, 1]
     # Global element lattice for this (j, kk) tile: bits depend on the
-    # absolute indices only, never on the block shape or grid order.
-    rows = (pl.program_id(2) * bk
+    # absolute indices only, never on the block shape or grid order.  The
+    # SMEM offsets shift the lattice so a streamed tile draws exactly the
+    # (row_offset+i, col_offset+j) block of the one-shot Omega.
+    rows = (offs_ref[0, 0] + pl.program_id(2) * bk
             + jax.lax.broadcasted_iota(jnp.int32, (bk, bn), 0))
-    cols = (pl.program_id(1) * bn
+    cols = (offs_ref[0, 1] + pl.program_id(1) * bn
             + jax.lax.broadcasted_iota(jnp.int32, (bk, bn), 1))
     # Round through the storage format (fp8 study path: store_dtype=e4m3/e5m2,
     # consumed as bf16 — exactly what project() does with a materialized fp8
@@ -198,14 +207,24 @@ def shgemm_fused_pallas(a: jax.Array, key2: jax.Array, n: int, *,
                         bm: int, bn: int, bk: int, terms: int = 2,
                         dist: str = "gaussian", s: float = 3.0,
                         store_dtype=None, lowp_dtype=jnp.bfloat16,
+                        offsets: jax.Array | None = None,
                         interpret: bool = False) -> jax.Array:
-    """C[m, n] = A[m, k] @ Omega(key)[k, n]; Omega never touches HBM.
+    """C[m, n] = A[m, k] @ Omega(key)[k+r0, n+c0]; Omega never touches HBM.
 
     Shapes must be multiples of the block sizes — ``ops.shgemm_fused`` pads
     arbitrary shapes before calling this (A's zero pad rows null out the
     extra generated Omega rows, so padding never changes the result).
+
+    ``offsets`` is a (1, 2) int32 array ``[[row_offset, col_offset]]``
+    shifting the generated Omega's global lattice (dynamic — may be traced,
+    e.g. inside a scan over streamed tiles).  None means (0, 0).
     """
     m, k = a.shape
+    if offsets is None:
+        offsets = jnp.zeros((1, 2), jnp.int32)
+    if offsets.shape != (1, 2) or offsets.dtype != jnp.int32:
+        raise ValueError(f"offsets must be (1, 2) int32, got "
+                         f"{offsets.shape}/{offsets.dtype}")
     if a.dtype != jnp.float32:
         raise TypeError(f"A must be f32, got {a.dtype}")
     if key2.shape != (1, 2) or key2.dtype != jnp.uint32:
@@ -232,6 +251,8 @@ def shgemm_fused_pallas(a: jax.Array, key2: jax.Array, n: int, *,
         in_specs=[
             pl.BlockSpec((1, 2), lambda i, j, kk: (0, 0),
                          memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 2), lambda i, j, kk: (0, 0),
+                         memory_space=pltpu.SMEM),
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
@@ -241,7 +262,7 @@ def shgemm_fused_pallas(a: jax.Array, key2: jax.Array, n: int, *,
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(key2, a)
+    )(key2, offsets, a)
 
 
 def hbm_bytes_modeled(m: int, n: int, k: int, *, fused: bool,

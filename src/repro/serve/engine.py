@@ -4,10 +4,12 @@ A request enters a free slot, gets prefilled (cache written at its slot), and
 then joins the batched decode step; finished requests free their slot for the
 next queue entry.  All jit'd shapes are static: (slots, max_seq).
 
-Includes the beyond-paper KV-cache compression hook (serve/kv_compress.py):
-when a slot's history exceeds ``compress_after``, its per-layer KV history is
-replaced by a rank-r RSVD factorization computed with the paper's
-mixed-precision projection.
+Includes the beyond-paper KV-cache compression hook (serve/kv_compress.py).
+With ``kv_sketch_rank`` set, the engine maintains **incremental** per-slot
+streaming sketches (repro.stream): every appended token updates the sketch
+in O(1·d·p) instead of redecomposing the whole cache, and ``kv_factors``
+finalizes rank-r factorizations on demand — bit-identical to a full
+recompute over the same appended rows (DESIGN.md §10).
 """
 
 from __future__ import annotations
@@ -22,6 +24,7 @@ import numpy as np
 from repro.configs.base import ModelCfg
 from repro.models import cache as cache_mod
 from repro.models import registry as R
+from repro.serve import kv_compress
 
 
 @dataclasses.dataclass
@@ -36,7 +39,8 @@ class Request:
 class Engine:
     def __init__(self, cfg: ModelCfg, params, *, slots: int = 4,
                  max_seq: int = 256, temperature: float = 0.0,
-                 sample_seed: int = 0):
+                 sample_seed: int = 0, kv_sketch_rank: Optional[int] = None,
+                 kv_sketch_seed: int = 7):
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -49,6 +53,124 @@ class Engine:
         self.queue: list[Request] = []
         self._decode = jax.jit(R.make_serve_step(cfg))
         self._prefill_one = jax.jit(self._make_slot_prefill())
+        # incremental KV compression (serve/kv_compress.py): per-slot,
+        # per-cache-leaf streaming sketch states, appended as tokens land.
+        self.kv_sketch_rank = kv_sketch_rank
+        self._kv_key = jax.random.PRNGKey(kv_sketch_seed)
+        self._kv_paths = self._find_kv_paths() if kv_sketch_rank else []
+        self._kv_sketches: list[Optional[dict]] = [None] * slots
+        # contiguous [start, count] span of cache rows not yet absorbed into
+        # the sketches — decode only extends the span; the actual update
+        # GEMMs run batched every _KV_FLUSH tokens or on kv_factors(), so
+        # the jit'd decode hot loop pays no per-token sketch dispatch.
+        self._kv_pending: list[Optional[list]] = [None] * slots
+        self._kv_flush_every = 16
+
+    # -- incremental KV sketching ------------------------------------------
+    def _find_kv_paths(self) -> list:
+        """Full-context KV leaves of the cache eligible for incremental
+        sketching: attention k/v (seq axis == max_seq — sliding-window and
+        cross-attention histories are skipped: their rows are overwritten /
+        static, which breaks the append-only linear-sketch model) and MLA
+        latent ckv/kr."""
+        paths = []
+        for group in ("pre", "rem"):
+            for i, layer in enumerate(self.cache[group] or ()):
+                for name, leaf in layer.items():
+                    if self._kv_seq_axis_ok(name, leaf):
+                        paths.append((group, i, name))
+        for i, layer in enumerate(self.cache["scan"] or ()):
+            for name, leaf in layer.items():
+                if self._kv_seq_axis_ok(name, leaf):
+                    paths.append(("scan", i, name))
+        return paths
+
+    def _kv_seq_axis_ok(self, name: str, leaf) -> bool:
+        if name in ("k", "v"):
+            return leaf.shape[-3] == self.max_seq
+        if name in ("ckv", "kr"):
+            return leaf.shape[-2] == self.max_seq
+        return False
+
+    def _kv_leaf_rows(self, path, slot: int, start: int, length: int):
+        """(heads_batch, length, d) view of cache rows [start, start+len)."""
+        group, i, name = path
+        leaf = self.cache[group][i][name]
+        if group == "scan":
+            leaf = leaf[:, slot]                   # (periods, S, ...) view
+        else:
+            leaf = leaf[slot]
+        if name in ("k", "v"):
+            rows = leaf[..., start:start + length, :, :]
+            rows = jnp.moveaxis(rows, -2, -3)      # (..., KV, T, hd)
+        else:                                      # ckv/kr: (..., S, d)
+            rows = leaf[..., start:start + length, :][..., None, :, :]
+        return rows.reshape((-1,) + rows.shape[-2:])
+
+    def _reset_slot_sketches(self, slot: int) -> None:
+        sketches = {}
+        for j, path in enumerate(self._kv_paths):
+            rows = self._kv_leaf_rows(path, slot, 0, 1)
+            key = jax.random.fold_in(jax.random.fold_in(self._kv_key, slot),
+                                     j)
+            sketches[path] = kv_compress.kv_sketch_init(
+                key, rows.shape[0], rows.shape[-1], self.max_seq,
+                self.kv_sketch_rank)
+        self._kv_sketches[slot] = sketches
+
+    def _append_slot_sketches(self, slot: int, start: int,
+                              length: int) -> None:
+        sk = self._kv_sketches[slot]
+        for path in self._kv_paths:
+            rows = self._kv_leaf_rows(path, slot, start, length)
+            sk[path] = kv_compress.kv_sketch_append(sk[path], rows, start)
+
+    def _note_kv_row(self, slot: int, pos: int) -> None:
+        """Record that cache row ``pos`` landed for ``slot``; flush the
+        pending span through the sketch GEMMs only when it is long enough
+        to amortize the dispatch (cache rows are append-only while a slot
+        is live, so deferring the read is safe)."""
+        pend = self._kv_pending[slot]
+        if pend is None:
+            self._kv_pending[slot] = [pos, 1]
+        elif pend[0] + pend[1] == pos:
+            pend[1] += 1
+        else:                                  # discontiguous: flush + restart
+            self._flush_kv_pending(slot)
+            self._kv_pending[slot] = [pos, 1]
+        pend = self._kv_pending[slot]
+        if pend[1] >= self._kv_flush_every:
+            self._flush_kv_pending(slot)
+
+    def _flush_kv_pending(self, slot: int) -> None:
+        pend = self._kv_pending[slot]
+        if pend is None:
+            return
+        # fixed-size chunks keep the jitted update shapes to at most
+        # _kv_flush_every variants (arbitrary prompt lengths would otherwise
+        # compile a fresh executable per distinct span length per leaf)
+        start, count = pend
+        while count > 0:
+            step = min(count, self._kv_flush_every)
+            self._append_slot_sketches(slot, start, step)
+            start += step
+            count -= step
+        self._kv_pending[slot] = None
+
+    def kv_factors(self, slot: int) -> dict:
+        """Rank-r FactoredKV per sketched cache leaf for ``slot``, finalized
+        from the incrementally maintained sketches (no re-sketching)."""
+        if self._kv_sketches[slot] is None:
+            raise ValueError(f"slot {slot} has no sketch state (engine "
+                             f"built without kv_sketch_rank, or slot never "
+                             f"admitted)")
+        self._flush_kv_pending(slot)
+        out = {}
+        for path in self._kv_paths:
+            hist = self._kv_leaf_rows(path, slot, 0, self.max_seq)
+            out[path] = kv_compress.kv_sketch_factor(
+                self._kv_sketches[slot][path], hist, self.kv_sketch_rank)
+        return out
 
     # -- slot prefill: run the prompt through decode steps (simple, correct,
     #    static-shaped; a chunked prefill kernel is a serving optimization) --
@@ -109,6 +231,9 @@ class Engine:
                 self.pos[s] = len(req.prompt)
                 nxt = int(jnp.argmax(logits[s]))
                 req.out.append(nxt)
+                if self.kv_sketch_rank:
+                    self._reset_slot_sketches(s)
+                    self._kv_pending[s] = [0, len(req.prompt)]
 
     def step(self) -> int:
         """One batched decode step over all active slots; returns #active."""
@@ -130,6 +255,9 @@ class Engine:
         else:
             nxt = jnp.argmax(logits, axis=-1)
         nxt = np.asarray(nxt)
+        if self.kv_sketch_rank:
+            for s in live:
+                self._note_kv_row(s, write_pos)
         for s in live:
             req = self.active[s]
             req.out.append(int(nxt[s]))

@@ -7,9 +7,14 @@ RSVD and keep (U_k*S_k, V_k) — memory r*(S + d)/ (S*d) of the original —
 then reconstruct on attention (or attend in factored form:
 q^T K^T = (q^T V_k) (U_k S_k)^T, two skinny GEMMs).
 
-This module provides the factor/reconstruct/attend primitives and a
-``compress_cache`` pass over an engine cache; serving quality vs rank is
-benchmarked in benchmarks/kv_compress_bench.py.
+This module provides the factor/reconstruct/attend primitives, a
+``compress_cache`` pass over an engine cache, and — via ``repro.stream`` —
+**incremental** compression: a per-head streaming sketch state updated with
+each appended token (``kv_sketch_append``), so the O(S·d·p) sketch GEMM is
+never recomputed from scratch, and ``kv_sketch_factor`` finalizes factors
+on demand.  Because sketch updates are bit-identical to one-shot sketching
+(DESIGN.md §10), incremental append + finalize equals full recompute
+exactly.  serve/engine.py plumbs this per slot.
 """
 
 from __future__ import annotations
@@ -20,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import rsvd as rsvd_mod
+from repro import stream
 
 
 class FactoredKV(NamedTuple):
@@ -47,6 +53,62 @@ def factored_scores(q: jax.Array, f: FactoredKV) -> jax.Array:
 def compression_error(m: jax.Array, f: FactoredKV) -> jax.Array:
     m = m.astype(jnp.float32)
     return jnp.linalg.norm(m - reconstruct(f)) / jnp.linalg.norm(m)
+
+
+def _sketch_width(rank: int, head_dim: int) -> int:
+    return min(rank + min(8, max(2, rank // 4)), head_dim)
+
+
+def kv_sketch_init(key, n_heads: int, head_dim: int, max_seq: int,
+                   rank: int, *, method: str = "shgemm") -> stream.SketchState:
+    """Per-head streaming sketch states for one (slot, layer) KV history.
+
+    Returns a head-batched ``SketchState`` (leaves lead with n_heads) whose
+    right sketch Y_h = K_h · Omega_h accumulates as tokens append.  State is
+    O(n_heads · max_seq · p) — the factor basis, not the history.  The
+    default jnp ``shgemm`` method keeps updates vmap-friendly per head.
+    """
+    p = _sketch_width(rank, head_dim)
+    keys = jax.random.split(key, n_heads)
+    return jax.vmap(
+        lambda k: stream.init(k, head_dim, p, max_rows=max_seq,
+                              method=method))(keys)
+
+
+def kv_sketch_append(states: stream.SketchState, rows: jax.Array,
+                     pos) -> stream.SketchState:
+    """Absorb newly appended tokens: ``rows`` (n_heads, T, head_dim) written
+    at sequence position ``pos`` (int or traced).  Incremental cost is
+    O(T · head_dim · p) instead of re-sketching the whole history."""
+    return jax.vmap(lambda s, r: stream.update(s, r, pos),
+                    in_axes=(0, 0))(states, rows.astype(jnp.float32))
+
+
+def kv_sketch_factor(states: stream.SketchState, hist: jax.Array,
+                     rank: int):
+    """Finalize per-head factors from the accumulated sketches.
+
+    ``hist`` (n_heads, S, head_dim) is the live cache (it exists in HBM
+    anyway — the sketch replaces the *recomputed projection*, not the
+    cache).  Cache rows the sketch never saw (recycled-slot leftovers,
+    preallocated tails) are masked out of the projection, so the factors
+    depend only on the streamed rows.  Returns head-batched FactoredKV.
+    """
+    def one(s, m):
+        q = stream.range_basis(s)                    # (max_seq, p)
+        # Mask unseen rows: with fewer streamed rows than the sketch width,
+        # QR of the rank-deficient Y emits junk trailing columns supported
+        # on unseen rows — without the mask those would dot stale cache
+        # content into b.
+        seen = (jnp.arange(m.shape[0]) < s.rows_seen)[:, None]
+        m = jnp.where(seen, m, 0.0)
+        b = jnp.dot(q.T, m, precision=jax.lax.Precision.HIGHEST,
+                    preferred_element_type=jnp.float32)   # (p, head_dim)
+        u_b, sv, vt = jnp.linalg.svd(b, full_matrices=False)
+        us = jnp.dot(q, u_b[:, :rank],
+                     preferred_element_type=jnp.float32) * sv[None, :rank]
+        return FactoredKV(us, vt[:rank, :])
+    return jax.vmap(one)(states, hist.astype(jnp.float32))
 
 
 def compress_kv_cache(key, k_cache: jax.Array, v_cache: jax.Array,

@@ -1,0 +1,30 @@
+"""Streaming sketch engine: single-pass, out-of-core RandNLA on the
+zero-HBM fused kernel (DESIGN.md §10).
+
+State + update/merge algebra:  state.py  (SketchState, init, update,
+update_cols, merge).  Matrix finalizers: finalize.py (svd, range_basis).
+Streaming Tucker: tucker.py (TuckerSketch, tucker_init/update/merge and the
+``tucker`` finalizer).
+
+Consumers: core/rsvd.py ``rsvd_streamed`` (out-of-core matrices),
+serve/kv_compress.py (incremental KV compression), optim/compression.py
+(gradient-sketch accumulation over microbatches), core/hosvd.py
+``rp_sthosvd_streamed``.
+"""
+
+from repro.stream.state import (SketchState, init, merge, update,
+                                update_cols)
+from repro.stream.finalize import range_basis, svd
+from repro.stream.tucker import (TuckerSketch, tucker, tucker_finalize,
+                                 tucker_init, tucker_merge, tucker_update)
+
+# ``stream.range(state)`` per the subsystem spec; range_basis is the
+# shadow-free name.
+range = range_basis  # noqa: A001
+
+__all__ = [
+    "SketchState", "init", "update", "update_cols", "merge",
+    "svd", "range", "range_basis",
+    "TuckerSketch", "tucker", "tucker_finalize", "tucker_init",
+    "tucker_merge", "tucker_update",
+]

@@ -1,0 +1,87 @@
+"""Finalizers: factorizations computed from accumulated sketch state alone.
+
+``range_basis`` needs only the right sketch Y; ``svd`` is the single-pass
+randomized SVD of Tropp et al. (2017) — Q from Y, then the small system
+``(Psi·Q) X = W`` recovers the rank-p core without a second look at A.  A
+is never touched; Psi·Q is one more fused sketch of Q^T (the Psi stream
+regenerated from its key, still zero HBM bytes for the random matrix).
+
+Two-pass consumers (out-of-core drivers that CAN replay their tile stream,
+e.g. ``core.rsvd.rsvd_streamed``) get strictly better accuracy by
+accumulating B = Q^T A over a second pass; that driver logic lives with the
+consumers — everything here is sketch-only.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import projection as proj
+from repro.kernels import ops
+from repro.kernels import shgemm_fused as _kf
+from repro.stream.state import SketchState, _psi_s
+
+
+def _dot(a, b):
+    return jnp.dot(a, b, precision=jax.lax.Precision.HIGHEST,
+                   preferred_element_type=jnp.float32)
+
+
+def range_basis(state: SketchState) -> jax.Array:
+    """Q (max_rows, p) with orthonormal columns s.t. A ~ Q Q^T A.
+
+    Rows of Y beyond the streamed ones are zero.  Caveat: if FEWER than p
+    rows were streamed, Y is rank-deficient and QR emits junk trailing
+    columns supported on the unseen rows — consumers that project
+    cache-resident data through Q must mask rows beyond ``rows_seen``
+    (cf. kv_compress.kv_sketch_factor, DESIGN.md §10.5).  With >= p
+    streamed rows the unseen rows of Q are exactly zero.
+    """
+    q, _ = jnp.linalg.qr(state.y.astype(jnp.float32))
+    return q
+
+
+def psi_times(state: SketchState, m: jax.Array) -> jax.Array:
+    """Psi · M for an (max_rows, c) matrix M, via (M^T · Psi^T)^T.
+
+    With the fused method this is one more zero-HBM sketch (Psi's blocks
+    hashed in-kernel); otherwise Psi^T is materialized from the identical
+    counter stream (reference_omega) and fed through the method's GEMM.
+    """
+    if state.key_psi is None:
+        raise ValueError("state has no left sketch (init(left=True))")
+    if state.method == "shgemm_fused":
+        return ops.shgemm_fused(m.T, state.key_psi, state.l, dist=state.dist,
+                                omega_dtype=state.odtype,
+                                s=_psi_s(state)).T
+    psi_t = _kf.reference_omega(state.key_psi, (m.shape[0], state.l),
+                                dist=state.dist, s=_psi_s(state),
+                                dtype=state.odtype)
+    return proj.project(m.T, psi_t, method=state.method).T
+
+
+def svd(state: SketchState, rank: int):
+    """Single-pass randomized SVD from (Y, W) — A is never revisited.
+
+    Tropp et al. 2017 (Practical sketching, Alg. 7): Q = orth(Y);
+    solve (Psi Q) X = W in least squares; SVD the (p, n_cols) core X;
+    A ~ Q X.  Needs ``init(left=True)``.  Returns core.rsvd.SVDResult.
+    """
+    from repro.core.rsvd import SVDResult  # deferred: rsvd imports stream
+    if state.w is None:
+        raise ValueError(
+            "single-pass svd needs the left sketch: build the state with "
+            "stream.init(..., left=True), or use core.rsvd.rsvd_streamed "
+            "with a replayable tile stream for the two-pass variant")
+    if rank > state.p:
+        raise ValueError(f"rank={rank} exceeds sketch width p={state.p}")
+    q = range_basis(state)                      # (m, p)
+    psi_q = psi_times(state, q)                 # (l, p)
+    u_t, t = jnp.linalg.qr(psi_q)               # (l, p), (p, p)
+    # X = T^+ (U^T W): lstsq tolerates a rank-deficient sketch (e.g. the
+    # matrix rank < p) where a triangular solve would blow up.
+    x = jnp.linalg.lstsq(t, _dot(u_t.T, state.w))[0]   # (p, n_cols)
+    u_x, s, vt = jnp.linalg.svd(x, full_matrices=False)
+    u = _dot(q, u_x)
+    return SVDResult(u[:, :rank], s[:rank], vt[:rank, :])

@@ -1,0 +1,319 @@
+"""Streaming-sketch state: a linear sketch of a matrix that arrives in tiles.
+
+Randomized sketches are linear in A, so they can be accumulated tile-by-tile
+in a single pass without ever materializing A — and the fused counter-hash
+Omega stream (kernels/shgemm_fused.py, DESIGN.md §9) means any (row, col)
+block of the random matrices can be regenerated in-kernel from
+``(key, global offsets)``, so the streaming update never materializes or
+stores Omega either.  ``SketchState`` carries:
+
+  * ``y`` — the right sketch Y = A·Omega, (max_rows, p).  Row tiles write
+    their rows of Y directly; because every Omega element is a pure function
+    of (key, global index), a row tile's sketch is **bit-identical** to the
+    corresponding rows of the one-shot ``projection.sketch`` of the
+    concatenated matrix (same per-row K-accumulation, same Omega bits).
+  * ``w`` — optional left sketch W = Psi·A, (l, n_cols), accumulated as
+    ``W += Psi[:, rows]·A_tile``.  Psi's column block at an arbitrary row
+    offset is regenerated from the counter stream — the piece a jax.random
+    stream cannot do without materializing all of Psi.  Needed for the
+    single-pass ``stream.svd`` finalizer; right-only states skip it.
+  * key/offset bookkeeping: raw PRNG key words for the Omega and Psi
+    streams plus a ``rows_seen`` high-water mark.
+
+The algebra (DESIGN.md §10):
+
+  update  — linear in A; full-width row tiles use *write* semantics (bit
+            deterministic), general 2-D tiles (``update_cols``) use *add*
+            semantics (deterministic up to f32 summation order).
+  merge   — states over disjoint tile sets combine by addition (linearity);
+            commutative bit-for-bit, associative to f32 rounding.
+  finalize— stream/finalize.py (svd / range), stream/tucker.py (sthosvd).
+
+Everything is a registered pytree with static config in aux data, so states
+thread through jit / lax.scan / vmap unchanged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import projection as proj
+from repro.kernels import autotune as _tune
+from repro.kernels import ops
+from repro.kernels import shgemm_fused as _kf
+
+
+@dataclasses.dataclass(frozen=True)
+class SketchState:
+    """Linear sketch accumulator (see module docstring).
+
+    Array fields are pytree data; the trailing config fields are static aux
+    data (hashable — safe as a jit/scan carry)."""
+    y: jax.Array                      # (max_rows, p) f32 right sketch
+    w: Optional[jax.Array]            # (l, n_cols) f32 left sketch or None
+    key_omega: jax.Array              # raw uint32 key data — Omega stream
+    key_psi: Optional[jax.Array]      # raw uint32 key data — Psi stream
+    rows_seen: jax.Array              # () int32 high-water mark
+    n_cols: int = dataclasses.field(metadata={"static": True}, default=0)
+    p: int = dataclasses.field(metadata={"static": True}, default=0)
+    l: int = dataclasses.field(metadata={"static": True}, default=0)
+    method: str = dataclasses.field(metadata={"static": True},
+                                    default="shgemm_fused")
+    dist: str = dataclasses.field(metadata={"static": True},
+                                  default="gaussian")
+    omega_dtype: str = dataclasses.field(metadata={"static": True},
+                                         default="bfloat16")
+
+    @property
+    def max_rows(self) -> int:
+        return self.y.shape[0]
+
+    @property
+    def odtype(self):
+        return jnp.dtype(self.omega_dtype)
+
+
+jax.tree_util.register_dataclass(
+    SketchState,
+    data_fields=("y", "w", "key_omega", "key_psi", "rows_seen"),
+    meta_fields=("n_cols", "p", "l", "method", "dist", "omega_dtype"),
+)
+
+
+def init(key: jax.Array, n_cols: int, p: int, *, max_rows: int,
+         left: bool = False, l: int | None = None,
+         method: proj.ProjectionMethod = "shgemm_fused",
+         dist: proj.SketchDist = "gaussian",
+         omega_dtype=jnp.bfloat16) -> SketchState:
+    """Fresh sketch state for a matrix with ``n_cols`` columns and up to
+    ``max_rows`` streamed rows.
+
+    ``p`` is the sketch width (rank + oversample at the consumer level).
+    ``left=True`` additionally accumulates the left sketch W = Psi·A
+    (width ``l``, default 2p+1) needed by the single-pass ``stream.svd``;
+    the Psi stream is always the counter hash (the only generator that can
+    regenerate arbitrary blocks), whatever the GEMM ``method``.
+
+    The Omega stream is exactly the one ``projection.sketch(key, ..)`` uses
+    for ``method``, so streamed results match one-shot sketching bit for
+    bit (legacy jax.random streams for non-fused methods, the fused counter
+    hash for ``shgemm_fused``).
+    """
+    if p > n_cols:
+        raise ValueError(f"sketch width p={p} exceeds n_cols={n_cols}")
+    l = int(l) if l is not None else 2 * p + 1
+    key_omega = _raw_key(key)
+    key_psi = _raw_key(jax.random.fold_in(key, 0x5117))
+    return SketchState(
+        y=jnp.zeros((max_rows, p), jnp.float32),
+        w=jnp.zeros((l, n_cols), jnp.float32) if left else None,
+        key_omega=key_omega,
+        key_psi=key_psi if left else None,
+        rows_seen=jnp.zeros((), jnp.int32),
+        n_cols=int(n_cols), p=int(p), l=l, method=str(method),
+        dist=str(dist), omega_dtype=jnp.dtype(omega_dtype).name,
+    )
+
+
+def _raw_key(key: jax.Array) -> jax.Array:
+    """(2,) uint32 key data from a typed or legacy raw PRNG key."""
+    if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+        key = jax.random.key_data(key)
+    return key.astype(jnp.uint32).reshape(-1)[:2]
+
+
+def _typed_key(raw: jax.Array) -> jax.Array:
+    return jax.random.wrap_key_data(raw.reshape(2).astype(jnp.uint32))
+
+
+def _psi_s(state: SketchState) -> float | None:
+    """Psi's sparse-dist parameter must come from the GLOBAL row count, not
+    any one tile's height (one-shot/streamed agreement)."""
+    if state.dist == "very_sparse":
+        return float(math.sqrt(state.max_rows))
+    return None
+
+
+def _sketch_rows(state: SketchState, a_block: jax.Array) -> jax.Array:
+    """a_block (b, n_cols) -> its rows of Y = A·Omega, bit-identical to the
+    one-shot sketch's rows (Omega depends only on (key, n_cols, p))."""
+    if state.method == "shgemm_fused":
+        # explicit heuristic blocks: bn/bk depend only on (p, n_cols), so
+        # every tile shares one K-chunking whatever its height.  The Omega
+        # BITS are always identical to one-shot; the bitwise-equal-results
+        # guarantee additionally needs the one-shot side to resolve the same
+        # bk — true for the heuristic (no tuned cache entry for that exact
+        # shape); under a tuned cache with a different bk the results differ
+        # by f32 summation order only (~1 ulp, DESIGN.md §9).
+        blocks = _tune.heuristic_blocks(a_block.shape[0], state.p,
+                                        state.n_cols)
+        return ops.shgemm_fused(a_block, state.key_omega, state.p,
+                                dist=state.dist, omega_dtype=state.odtype,
+                                blocks=blocks)
+    return proj.sketch(_typed_key(state.key_omega), a_block, state.p,
+                       method=state.method, dist=state.dist,
+                       omega_dtype=state.odtype)
+
+
+def _psi_block_t(state: SketchState, rows: int, row_offset) -> jax.Array:
+    """Psi^T[row_offset : row_offset+rows, :l] from the counter stream."""
+    return _kf.reference_omega(
+        state.key_psi, (rows, state.l), dist=state.dist,
+        s=_psi_s(state), dtype=state.odtype, row_offset=row_offset)
+
+
+def _left_update(state: SketchState, a_block: jax.Array,
+                 row_offset) -> jax.Array:
+    """W increment Psi[:, rows]·A_tile as (A_tile^T · Psi^T_rows)^T."""
+    at = a_block.T  # (n_cols, b)
+    if state.method == "shgemm_fused":
+        blocks = _tune.heuristic_blocks(state.n_cols, state.l,
+                                        a_block.shape[0])
+        inc = ops.shgemm_fused(at, state.key_psi, state.l, dist=state.dist,
+                               omega_dtype=state.odtype, blocks=blocks,
+                               s=_psi_s(state),
+                               row_offset=jnp.asarray(row_offset, jnp.int32))
+    else:
+        psi_t = _psi_block_t(state, a_block.shape[0], row_offset)
+        inc = proj.project(at, psi_t, method=state.method)
+    return inc.T  # (l, n_cols)
+
+
+def update(state: SketchState, a_block: jax.Array,
+           row_offset) -> SketchState:
+    """Absorb a full-width row tile ``a_block = A[row_offset:row_offset+b]``.
+
+    jit/scan-friendly (``row_offset`` may be traced).  Y rows are *written*
+    (each tile's rows are bit-identical to the one-shot sketch of the
+    concatenated matrix — DESIGN.md §10); W accumulates Psi[:, rows]·tile.
+    Tiles must not overlap; feed them in any order (Y) — W is summed, so
+    its bits depend on arrival order only through f32 addition order.
+    """
+    a_block = a_block.astype(jnp.float32)
+    b, n = a_block.shape
+    if n != state.n_cols:
+        raise ValueError(f"row tile has {n} columns, state expects "
+                         f"{state.n_cols}; use update_cols for partial-width "
+                         f"tiles")
+    off = jnp.asarray(row_offset, jnp.int32)
+    y = jax.lax.dynamic_update_slice(state.y, _sketch_rows(state, a_block),
+                                     (off, jnp.int32(0)))
+    w = state.w
+    if w is not None:
+        w = w + _left_update(state, a_block, off)
+    rows_seen = jnp.maximum(state.rows_seen, off + b)
+    return dataclasses.replace(state, y=y, w=w, rows_seen=rows_seen)
+
+
+def update_cols(state: SketchState, a_block: jax.Array, row_offset,
+                col_offset) -> SketchState:
+    """Absorb a general 2-D tile ``A[r0:r0+br, c0:c0+bc]`` (out-of-core
+    matrices tiled in both dimensions, or mode-k unfoldings of a streamed
+    tensor whose slabs are column ranges).
+
+    Both sketches accumulate with *add* semantics:
+      Y[r0:r0+br] += tile · Omega[c0:c0+bc]      (Omega row block in-kernel)
+      W[:, c0:c0+bc] += Psi[:, r0:r0+br] · tile
+    Deterministic given tile order; bit-identity to one-shot holds only for
+    full-width row tiles (use ``update`` there).  Tiles must tile A exactly
+    (each element covered once).
+    """
+    a_block = a_block.astype(jnp.float32)
+    br, bc = a_block.shape
+    if bc > state.n_cols:
+        raise ValueError(f"tile has {bc} columns > n_cols={state.n_cols}")
+    r0 = jnp.asarray(row_offset, jnp.int32)
+    c0 = jnp.asarray(col_offset, jnp.int32)
+
+    if state.method == "shgemm_fused":
+        blocks = _tune.heuristic_blocks(br, state.p, bc)
+        s = (float(math.sqrt(state.n_cols))
+             if state.dist == "very_sparse" else None)
+        y_inc = ops.shgemm_fused(a_block, state.key_omega, state.p,
+                                 dist=state.dist, omega_dtype=state.odtype,
+                                 blocks=blocks, s=s, row_offset=c0)
+    else:
+        omega = _materialize_omega(state)
+        om_blk = jax.lax.dynamic_slice(omega, (c0, jnp.int32(0)),
+                                       (bc, state.p))
+        y_inc = proj.project(a_block, om_blk, method=state.method)
+    cur = jax.lax.dynamic_slice(state.y, (r0, jnp.int32(0)), (br, state.p))
+    y = jax.lax.dynamic_update_slice(state.y, cur + y_inc,
+                                     (r0, jnp.int32(0)))
+
+    w = state.w
+    if w is not None:
+        if state.method == "shgemm_fused":
+            blocks = _tune.heuristic_blocks(bc, state.l, br)
+            w_inc = ops.shgemm_fused(a_block.T, state.key_psi, state.l,
+                                     dist=state.dist,
+                                     omega_dtype=state.odtype, blocks=blocks,
+                                     s=_psi_s(state), row_offset=r0).T
+        else:
+            psi_t = _psi_block_t(state, br, r0)
+            w_inc = proj.project(a_block.T, psi_t, method=state.method).T
+        cur_w = jax.lax.dynamic_slice(w, (jnp.int32(0), c0), (state.l, bc))
+        w = jax.lax.dynamic_update_slice(w, cur_w + w_inc, (jnp.int32(0), c0))
+
+    rows_seen = jnp.maximum(state.rows_seen, r0 + br)
+    return dataclasses.replace(state, y=y, w=w, rows_seen=rows_seen)
+
+
+def _materialize_omega(state: SketchState) -> jax.Array:
+    """Full (n_cols, p) Omega for non-fused partial-width updates — O(n·p)
+    temporary, the same stream ``projection.sketch`` draws (shared
+    dispatch, so the two can never diverge)."""
+    return proj.materialize_omega(_typed_key(state.key_omega),
+                                  (state.n_cols, state.p), dist=state.dist,
+                                  dtype=state.odtype)
+
+
+def _meta_mismatch(s1: SketchState, s2: SketchState) -> str | None:
+    for f in ("n_cols", "p", "l", "method", "dist", "omega_dtype"):
+        if getattr(s1, f) != getattr(s2, f):
+            return f
+    return None
+
+
+def _concretely_differ(a, b) -> bool:
+    try:
+        return bool((np.asarray(a) != np.asarray(b)).any())
+    except (jax.errors.TracerArrayConversionError, TypeError):
+        return False  # traced — the caller owns key discipline
+
+
+def merge(s1: SketchState, s2: SketchState) -> SketchState:
+    """Combine two sketch states built from disjoint tile sets of the same
+    matrix (data-parallel / multi-stream accumulation).
+
+    Sketches are linear in A, so merge is plain addition.  Commutative bit
+    for bit (IEEE f32 addition is commutative); associative up to f32
+    rounding (exact when row coverage is disjoint, since the other state's
+    rows of Y are zero).  Both states must share keys and config.
+    """
+    bad = _meta_mismatch(s1, s2)
+    if bad is not None:
+        raise ValueError(f"cannot merge sketch states: {bad} differs "
+                         f"({getattr(s1, bad)!r} vs {getattr(s2, bad)!r})")
+    if _concretely_differ(s1.key_omega, s2.key_omega):
+        raise ValueError("cannot merge sketch states drawn from different "
+                         "Omega keys — the sketches live in different "
+                         "random subspaces")
+    if (s1.w is None) != (s2.w is None):
+        raise ValueError("cannot merge a left-sketching state with a "
+                         "right-only one")
+    w = None
+    if s1.w is not None:
+        if _concretely_differ(s1.key_psi, s2.key_psi):
+            raise ValueError("cannot merge sketch states drawn from "
+                             "different Psi keys")
+        w = s1.w + s2.w
+    return dataclasses.replace(
+        s1, y=s1.y + s2.y, w=w,
+        rows_seen=jnp.maximum(s1.rows_seen, s2.rows_seen))

@@ -53,7 +53,39 @@ _SCRIPT = textwrap.dedent("""
         return float(jnp.linalg.norm(a2 - ap) / jnp.linalg.norm(a2))
     assert relerr(res2) < relerr(res0)
     assert relerr(res2) < 1.02 * floor, (relerr(res2), floor)
-    print("DISTRIBUTED_OK", err)
+
+    # fused method: each device generates its Omega row-block IN-KERNEL from
+    # (key, global column offset) — nothing materialized or communicated for
+    # the random matrix (DESIGN.md §9/§10).
+    from jax.sharding import PartitionSpec as P
+    from repro import compat
+    from repro.core.projection import fused_omega
+    from repro.kernels import ops, shgemm_fused as kf
+
+    res_f = D.distributed_rsvd(jax.random.PRNGKey(1), a_sh, 48, mesh,
+                               method="shgemm_fused")
+    approx_f = (res_f.u * res_f.s[None, :]) @ res_f.vt
+    err_f = float(jnp.linalg.norm(a - approx_f) / jnp.linalg.norm(a))
+    assert err_f < 1e-4, err_f
+    res_f1 = rsvd.rsvd(jax.random.PRNGKey(1), a, 48, method="shgemm_fused")
+    np.testing.assert_allclose(np.asarray(res_f.s[:16]),
+                               np.asarray(res_f1.s[:16]), rtol=1e-2)
+    qf = D.distributed_range_finder(jax.random.PRNGKey(2), a_sh, 58, mesh,
+                                    method="shgemm_fused")
+    np.testing.assert_allclose(np.asarray(qf.T @ qf), np.eye(58), atol=1e-4)
+
+    # the sharded fused projection equals the one-shot projection on the
+    # materialized counter-stream Omega up to f32 psum ordering alone
+    fnp = compat.shard_map(
+        lambda blk, k2: D._local_sketch_fused(blk, k2, 58, "model"),
+        mesh=mesh, in_specs=(P("data", "model"), P(None, None)),
+        out_specs=P("data", None), check_vma=False)
+    y = fnp(a_sh, kf.key_words(jax.random.PRNGKey(2)))
+    y_ref = ops.shgemm(a, fused_omega(jax.random.PRNGKey(2), (512, 58),
+                                      dtype=jnp.bfloat16))
+    rel = float(jnp.linalg.norm(y - y_ref) / jnp.linalg.norm(y_ref))
+    assert rel < 1e-5, rel
+    print("DISTRIBUTED_OK", err, err_f, rel)
 """)
 
 

@@ -1,0 +1,423 @@
+"""Streaming sketch engine (repro.stream, DESIGN.md §10): streamed-vs-oneshot
+bit-identity, merge algebra, single/two-pass streamed rSVD on the paper's
+synthetic matrices, streaming Tucker, kernel offset plumbing, incremental
+KV compression (module + engine), and microbatch gradient-sketch
+accumulation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import stream
+from repro.configs.base import smoke_config
+from repro.core import hosvd, rsvd
+from repro.core import projection as proj
+from repro.kernels import ops
+from repro.models import registry as R
+from repro.models import transformer as T
+from repro.optim import compression
+from repro.serve import kv_compress
+from repro.serve.engine import Engine, Request
+
+jax.config.update("jax_platform_name", "cpu")
+
+KEY = jax.random.PRNGKey(42)
+ALL_METHODS = ["f32", "lowp_single", "shgemm", "shgemm3", "shgemm_pallas",
+               "shgemm_fused"]
+
+
+def _stream_rows(key, a, p, tile, **kw):
+    m, n = a.shape
+    st = stream.init(key, n, p, max_rows=m, **kw)
+    for off in range(0, m, tile):
+        st = stream.update(st, a[off:off + tile], off)
+    return st
+
+
+# ---------------------------------------------------------------------------
+# The acceptance-criteria property: streamed == one-shot, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ALL_METHODS)
+def test_streamed_equals_oneshot_bitwise(method):
+    """stream.update over row tiles is bit-identical to one-shot
+    projection.sketch of the concatenated matrix — for EVERY method, across
+    tile sizes (incl. a ragged last tile)."""
+    m, n, p = 96, 160, 24
+    a = jax.random.normal(jax.random.PRNGKey(1), (m, n), jnp.float32)
+    oneshot = proj.sketch(KEY, a, p, method=method)
+    for tile in (16, 40, 96):
+        st = _stream_rows(KEY, a, p, tile, method=method)
+        np.testing.assert_array_equal(
+            np.asarray(st.y), np.asarray(oneshot),
+            err_msg=f"method={method} tile={tile}")
+
+
+@pytest.mark.parametrize("dist", ["achlioptas", "very_sparse"])
+def test_streamed_sparse_dists_bitwise(dist):
+    m, n, p = 64, 256, 16
+    a = jax.random.normal(jax.random.PRNGKey(2), (m, n), jnp.float32)
+    oneshot = proj.sketch(KEY, a, p, method="shgemm_fused", dist=dist)
+    st = _stream_rows(KEY, a, p, 16, method="shgemm_fused", dist=dist)
+    np.testing.assert_array_equal(np.asarray(st.y), np.asarray(oneshot))
+
+
+def test_update_under_scan():
+    """The state is a registered pytree with static aux — it must thread
+    through lax.scan (the jit/scan-friendliness contract) and produce the
+    same bits as the eager loop."""
+    m, n, p, tile = 64, 128, 16, 16
+    a = jax.random.normal(jax.random.PRNGKey(3), (m, n), jnp.float32)
+    st0 = stream.init(KEY, n, p, max_rows=m, left=True)
+
+    def body(st, blk_off):
+        blk, off = blk_off
+        return stream.update(st, blk, off), ()
+
+    tiles = a.reshape(m // tile, tile, n)
+    offs = jnp.arange(0, m, tile, dtype=jnp.int32)
+    scanned, _ = jax.lax.scan(body, st0, (tiles, offs))
+    st_eager = _stream_rows(KEY, a, p, tile, left=True)
+    np.testing.assert_array_equal(np.asarray(scanned.y),
+                                  np.asarray(st_eager.y))
+    np.testing.assert_array_equal(np.asarray(scanned.w),
+                                  np.asarray(st_eager.w))
+
+
+def test_update_cols_2d_tiling():
+    """General 2-D tiles (add semantics) reproduce the one-shot sketches to
+    f32 rounding, in any tile order."""
+    n, p = 128, 16
+    a = jax.random.normal(jax.random.PRNGKey(4), (n, n), jnp.float32)
+    ref = _stream_rows(KEY, a, p, n, left=True)   # single full tile
+    h = n // 2
+    st = stream.init(KEY, n, p, max_rows=n, left=True)
+    for r0, c0 in [(h, h), (0, 0), (h, 0), (0, h)]:
+        st = stream.update_cols(st, a[r0:r0 + h, c0:c0 + h], r0, c0)
+    np.testing.assert_allclose(np.asarray(st.y), np.asarray(ref.y),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st.w), np.asarray(ref.w),
+                               rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Merge algebra
+# ---------------------------------------------------------------------------
+
+def _partition_states(a, p, ranges, **kw):
+    n = a.shape[1]
+    out = []
+    for lo, hi in ranges:
+        st = stream.init(KEY, n, p, max_rows=a.shape[0], left=True, **kw)
+        for off in range(lo, hi, 32):
+            st = stream.update(st, a[off:off + 32], off)
+        out.append(st)
+    return out
+
+
+def test_merge_commutative_bitwise_and_associative():
+    m, n, p = 96, 128, 16
+    a = jax.random.normal(jax.random.PRNGKey(5), (m, n), jnp.float32)
+    s1, s2, s3 = _partition_states(a, p, [(0, 32), (32, 64), (64, 96)])
+    ab = stream.merge(s1, s2)
+    ba = stream.merge(s2, s1)
+    np.testing.assert_array_equal(np.asarray(ab.y), np.asarray(ba.y))
+    np.testing.assert_array_equal(np.asarray(ab.w), np.asarray(ba.w))
+    left = stream.merge(stream.merge(s1, s2), s3)
+    right = stream.merge(s1, stream.merge(s2, s3))
+    np.testing.assert_allclose(np.asarray(left.y), np.asarray(right.y),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(left.w), np.asarray(right.w),
+                               rtol=1e-6, atol=1e-6)
+    # disjoint-coverage merge == sequential accumulation, bit for bit on Y
+    seq = _stream_rows(KEY, a, p, 32, left=True)
+    np.testing.assert_array_equal(np.asarray(left.y), np.asarray(seq.y))
+    assert int(left.rows_seen) == m
+
+
+def test_merge_rejects_mismatched_states():
+    a = jax.random.normal(jax.random.PRNGKey(6), (32, 64), jnp.float32)
+    s1 = stream.init(KEY, 64, 8, max_rows=32, left=True)
+    s1 = stream.update(s1, a, 0)
+    with pytest.raises(ValueError, match="p differs"):
+        stream.merge(s1, stream.init(KEY, 64, 12, max_rows=32, left=True))
+    with pytest.raises(ValueError, match="Omega keys"):
+        stream.merge(s1, stream.init(jax.random.PRNGKey(7), 64, 8,
+                                     max_rows=32, left=True))
+    with pytest.raises(ValueError, match="left"):
+        stream.merge(s1, stream.init(KEY, 64, 8, max_rows=32, left=False))
+
+
+# ---------------------------------------------------------------------------
+# Streamed rSVD on the paper's synthetic matrices (§3.3 / §5.1.1)
+# ---------------------------------------------------------------------------
+
+def _paper_matrices(n=256, r=20):
+    k = jax.random.PRNGKey(8)
+    return {
+        "type1": rsvd.matrix_type1(k, n=n, r=r),
+        "type2": rsvd.matrix_type2(jax.random.fold_in(k, 1), n=n, r=r),
+        "cauchy": rsvd.matrix_cauchy(jax.random.fold_in(k, 2), n=n),
+    }
+
+
+@pytest.mark.parametrize("name", ["type1", "type2", "cauchy"])
+def test_rsvd_streamed_two_pass_matches_rsvd(name):
+    """Acceptance criterion: rsvd_streamed matches rsvd reconstruction error
+    to <= 1e-5 relative on the paper's synthetic matrices, holding one tile
+    + O(n p) state."""
+    a = _paper_matrices()[name]
+    n = a.shape[0]
+    rank = 24
+    res_s = rsvd.rsvd_streamed(
+        KEY, lambda: (a[i:i + 64] for i in range(0, n, 64)), rank,
+        n_rows=n, n_cols=n, method="shgemm_fused")
+    res_1 = rsvd.rsvd(KEY, a, rank, method="shgemm_fused")
+    err_s = float(rsvd.reconstruction_error(a, res_s))
+    err_1 = float(rsvd.reconstruction_error(a, res_1))
+    assert abs(err_s - err_1) <= 1e-5, (name, err_s, err_1)
+
+
+@pytest.mark.parametrize("name", ["type1", "type2", "cauchy"])
+def test_single_pass_svd_accuracy(name):
+    """stream.svd finalizes from the (Y, W) sketches alone — no second look
+    at A — and stays in the same accuracy regime as two-pass rsvd."""
+    a = _paper_matrices()[name]
+    n = a.shape[0]
+    rank = 24
+    st = _stream_rows(KEY, a, rank + 10, 64, left=True)
+    res = stream.svd(st, rank)
+    err = float(rsvd.reconstruction_error(a, res))
+    err_2p = float(rsvd.reconstruction_error(
+        a, rsvd.rsvd(KEY, a, rank, method="shgemm_fused")))
+    assert err <= 3.0 * err_2p + 1e-4, (name, err, err_2p)
+
+
+def test_rsvd_streamed_stream_discipline():
+    a = jax.random.normal(jax.random.PRNGKey(9), (128, 64), jnp.float32)
+    # a bare generator cannot be replayed for the two-pass variant
+    with pytest.raises(ValueError, match="replay"):
+        rsvd.rsvd_streamed(KEY, (a[i:i + 32] for i in range(0, 128, 32)),
+                           8, n_rows=128, n_cols=64)
+    # tiles must cover exactly n_rows
+    with pytest.raises(ValueError, match="cover"):
+        rsvd.rsvd_streamed(KEY, [a[:32]], 8, n_rows=128, n_cols=64)
+    # single-pass accepts a plain generator
+    res = rsvd.rsvd_streamed(KEY, (a[i:i + 32] for i in range(0, 128, 32)),
+                             8, n_rows=128, n_cols=64, passes=1)
+    assert res.u.shape == (128, 8)
+
+
+def test_svd_requires_left_sketch():
+    st = stream.init(KEY, 64, 8, max_rows=32, left=False)
+    with pytest.raises(ValueError, match="left=True"):
+        stream.svd(st, 4)
+
+
+# ---------------------------------------------------------------------------
+# Kernel offset plumbing (the satellite ops/kernels change)
+# ---------------------------------------------------------------------------
+
+def test_fused_offsets_match_materialized_slice():
+    """shgemm_fused with (row, col) offsets consumes exactly the offset
+    block of the one-shot Omega — bit-identical to shgemm on the
+    materialized slice with the same blocks."""
+    m, ktot = 64, 512
+    a = jax.random.normal(jax.random.PRNGKey(10), (m, ktot), jnp.float32)
+    blocks = (32, 128, 128)
+    om = proj.fused_omega(KEY, (ktot, 256), dtype=jnp.bfloat16)
+    y_r = ops.shgemm_fused(a[:, 128:384], KEY, 48, row_offset=128,
+                           blocks=blocks)
+    np.testing.assert_array_equal(
+        np.asarray(y_r), np.asarray(ops.shgemm(a[:, 128:384],
+                                               om[128:384, :48],
+                                               blocks=blocks)))
+    y_c = ops.shgemm_fused(a, KEY, 16, col_offset=128, blocks=blocks)
+    np.testing.assert_array_equal(
+        np.asarray(y_c), np.asarray(ops.shgemm(a, om[:, 128:144],
+                                               blocks=blocks)))
+
+
+def test_fused_offset_validation_and_traced_offsets():
+    a = jax.random.normal(jax.random.PRNGKey(11), (32, 256), jnp.float32)
+    blocks = (32, 128, 128)
+    with pytest.raises(ValueError, match="row_offset=64"):
+        ops.shgemm_fused(a, KEY, 48, row_offset=64, blocks=blocks)
+    with pytest.raises(ValueError, match="col_offset=7"):
+        ops.shgemm_fused(a, KEY, 48, col_offset=7, blocks=blocks)
+    with pytest.raises(ValueError, match=">= 0"):
+        ops.shgemm_fused(a, KEY, 48, row_offset=-128, blocks=blocks)
+    # traced offsets (scan carries) go through the SMEM path unchecked
+    want = ops.shgemm_fused(a, KEY, 48, row_offset=128, blocks=blocks)
+    got = jax.jit(lambda off: ops.shgemm_fused(a, KEY, 48, row_offset=off,
+                                               blocks=blocks))(
+        jnp.asarray(128, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_reference_omega_offsets():
+    from repro.kernels import shgemm_fused as kf
+    full = np.asarray(kf.reference_omega(KEY, (512, 64)))
+    blk = np.asarray(kf.reference_omega(KEY, (256, 16), row_offset=128,
+                                        col_offset=32))
+    np.testing.assert_array_equal(blk, full[128:384, 32:48])
+
+
+# ---------------------------------------------------------------------------
+# Streaming Tucker (single-pass sthosvd)
+# ---------------------------------------------------------------------------
+
+def test_tucker_stream_matches_sthosvd_accuracy():
+    dims, ranks = (40, 30, 20), (8, 8, 8)
+    t = hosvd.make_test_tensor(jax.random.PRNGKey(12), dims, ranks)
+    res = hosvd.rp_sthosvd_streamed(
+        KEY, (t[i:i + 10] for i in range(0, 40, 10)), dims, ranks)
+    err = float(hosvd.reconstruction_error(t, res))
+    base = float(hosvd.reconstruction_error(
+        t, hosvd.rp_sthosvd(KEY, t, ranks)))
+    # make_test_tensor has multilinear rank (J_i - 2) < ranks: both should
+    # recover it near-exactly; the streamed core solve adds a pinv
+    assert err <= 10.0 * base + 1e-3, (err, base)
+    for q, d, r in zip(res.factors, dims, ranks):
+        assert q.shape == (d, r)
+        np.testing.assert_allclose(np.asarray(q.T @ q), np.eye(r), atol=1e-4)
+
+
+def test_tucker_merge_matches_sequential():
+    dims, ranks = (32, 16, 12), (6, 6, 6)
+    t = hosvd.make_test_tensor(jax.random.PRNGKey(13), dims, ranks)
+    seq = stream.tucker_init(KEY, dims, ranks)
+    for off in range(0, 32, 8):
+        seq = stream.tucker_update(seq, t[off:off + 8], off)
+    t1 = stream.tucker_init(KEY, dims, ranks)
+    t2 = stream.tucker_init(KEY, dims, ranks)
+    for off in (0, 8):
+        t1 = stream.tucker_update(t1, t[off:off + 8], off)
+    for off in (16, 24):
+        t2 = stream.tucker_update(t2, t[off:off + 8], off)
+    merged = stream.tucker_merge(t1, t2)
+    np.testing.assert_array_equal(np.asarray(merged.modes[0].y),
+                                  np.asarray(seq.modes[0].y))
+    np.testing.assert_allclose(np.asarray(merged.z), np.asarray(seq.z),
+                               rtol=1e-5, atol=1e-5)
+    r_m = stream.tucker(merged)
+    r_s = stream.tucker(seq)
+    np.testing.assert_allclose(
+        float(hosvd.reconstruction_error(t, r_m)),
+        float(hosvd.reconstruction_error(t, r_s)), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Incremental KV compression
+# ---------------------------------------------------------------------------
+
+def test_kv_incremental_append_equals_full_recompute():
+    """Appending token chunks incrementally and finalizing equals one-shot
+    sketch + finalize over the same rows — bit for bit."""
+    heads, hd, max_seq, rank = 2, 32, 64, 6
+    u = jax.random.normal(jax.random.PRNGKey(14), (heads, max_seq, 4))
+    v = jax.random.normal(jax.random.PRNGKey(15), (heads, 4, hd))
+    hist = jnp.einsum("hsr,hrd->hsd", u, v)
+
+    inc = kv_compress.kv_sketch_init(KEY, heads, hd, max_seq, rank)
+    pos = 0
+    for chunk in (3, 1, 11, 17, 32):          # ragged appends
+        inc = kv_compress.kv_sketch_append(inc, hist[:, pos:pos + chunk],
+                                           pos)
+        pos += chunk
+    one = kv_compress.kv_sketch_init(KEY, heads, hd, max_seq, rank)
+    one = kv_compress.kv_sketch_append(one, hist, 0)
+    np.testing.assert_array_equal(np.asarray(inc.y), np.asarray(one.y))
+
+    f_inc = kv_compress.kv_sketch_factor(inc, hist, rank)
+    f_one = kv_compress.kv_sketch_factor(one, hist, rank)
+    np.testing.assert_array_equal(np.asarray(f_inc.us), np.asarray(f_one.us))
+    np.testing.assert_array_equal(np.asarray(f_inc.vt), np.asarray(f_one.vt))
+    # and the factorization is a sane low-rank approximation
+    recon = jnp.einsum("hsr,hrd->hsd", f_inc.us, f_inc.vt)
+    rel = float(jnp.linalg.norm(recon - hist) / jnp.linalg.norm(hist))
+    assert rel < 0.05, rel
+
+
+def test_kv_sketch_factor_masks_unseen_rows():
+    """Fewer streamed rows than the sketch width leaves Y rank-deficient and
+    QR emits junk trailing columns supported on unseen rows — the factor
+    step must mask those rows so stale cache content (recycled slots)
+    cannot leak into the factors."""
+    heads, hd, max_seq, rank = 1, 16, 32, 8      # sketch width p = 10 > 5
+    fresh = jax.random.normal(jax.random.PRNGKey(18), (heads, 5, hd))
+    stale = 100.0 * jax.random.normal(jax.random.PRNGKey(19),
+                                      (heads, max_seq, hd))
+    hist = stale.at[:, :5].set(fresh)            # rows >= 5 are stale junk
+    st = kv_compress.kv_sketch_init(KEY, heads, hd, max_seq, rank)
+    st = kv_compress.kv_sketch_append(st, fresh, 0)
+    f = kv_compress.kv_sketch_factor(st, hist, rank)
+    recon = jnp.einsum("hsr,hrd->hsd", f.us, f.vt)
+    # the factors reproduce the streamed rows ...
+    np.testing.assert_allclose(np.asarray(recon[:, :5]), np.asarray(fresh),
+                               rtol=1e-3, atol=1e-3)
+    # ... and carry nothing from the stale region
+    assert float(jnp.abs(recon[:, 5:]).max()) < 1e-3
+
+
+def test_engine_incremental_kv_sketch():
+    """Engine-plumbed incremental sketches equal a from-scratch recompute
+    over the rows the engine appended (prefill + decode steps)."""
+    cfg = smoke_config(R.get_arch("qwen3-0.6b"))
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, slots=2, max_seq=32, kv_sketch_rank=4)
+    eng.submit(Request(rid=0, prompt=[5, 7, 11], max_new=4))
+    while eng.step():
+        pass
+    assert eng._kv_paths, "qwen3 smoke config should expose k/v leaves"
+    facs = eng.kv_factors(0)
+    pos = int(eng.pos[0])
+    for j, path in enumerate(eng._kv_paths):
+        rows = eng._kv_leaf_rows(path, 0, 0, pos)
+        hist = eng._kv_leaf_rows(path, 0, 0, eng.max_seq)
+        key = jax.random.fold_in(jax.random.fold_in(eng._kv_key, 0), j)
+        st = kv_compress.kv_sketch_init(key, rows.shape[0], rows.shape[-1],
+                                        eng.max_seq, 4)
+        st = kv_compress.kv_sketch_append(st, rows, 0)
+        ref = kv_compress.kv_sketch_factor(st, hist, 4)
+        np.testing.assert_array_equal(np.asarray(facs[path].us),
+                                      np.asarray(ref.us), err_msg=str(path))
+        np.testing.assert_array_equal(np.asarray(facs[path].vt),
+                                      np.asarray(ref.vt), err_msg=str(path))
+
+
+# ---------------------------------------------------------------------------
+# Microbatch gradient-sketch accumulation
+# ---------------------------------------------------------------------------
+
+def test_microbatch_sketch_accumulation_matches_oneshot():
+    """begin/accumulate/finish over microbatches reproduces
+    compress_and_reduce on the summed gradient (sketch linearity)."""
+    grads = {"w": jax.random.normal(jax.random.PRNGKey(16), (512, 64)),
+             "b": jax.random.normal(jax.random.PRNGKey(17), (64,))}
+    micro = [jax.tree.map(lambda g: g * (0.3 + 0.2 * j), grads)
+             for j in range(4)]
+    total = jax.tree.map(lambda *gs: sum(gs), *micro)
+    st = compression.init_state(grads)
+    red_ref, st_ref = compression.compress_and_reduce(total, st, rank=16)
+    ms = compression.begin_accumulation(st, micro[0], rank=16)
+    for g in micro:
+        ms = compression.accumulate_microbatch(ms, g)
+    assert int(ms.n_micro) == 4
+    red_mb, st_mb = compression.finish_accumulation(ms)
+    np.testing.assert_allclose(np.asarray(red_mb["w"]),
+                               np.asarray(red_ref["w"]),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(red_mb["b"]),
+                                  np.asarray(red_ref["b"]))
+    np.testing.assert_allclose(np.asarray(st_mb.residual["w"]),
+                               np.asarray(st_ref.residual["w"]),
+                               rtol=1e-4, atol=1e-4)
+    assert int(st_mb.step) == int(st_ref.step) == 1
+    # second window keeps the error-feedback chain going
+    ms2 = compression.begin_accumulation(st_mb, micro[0], rank=16)
+    for g in micro:
+        ms2 = compression.accumulate_microbatch(ms2, g)
+    _, st2 = compression.finish_accumulation(ms2)
+    assert int(st2.step) == 2
