@@ -93,25 +93,47 @@ def rp_sthosvd(key: jax.Array, a: jax.Array, ranks: tuple[int, ...], *,
     return TuckerResult(core, tuple(factors))
 
 
-def rp_sthosvd_streamed(key: jax.Array, slabs, dims, ranks, *,
+def rp_sthosvd_streamed(key: jax.Array, slabs, dims=None, ranks=None, *,
                         method: proj.ProjectionMethod = "shgemm_fused",
                         dist: proj.SketchDist = "gaussian",
-                        omega_dtype=jnp.bfloat16) -> TuckerResult:
+                        omega_dtype=jnp.bfloat16,
+                        prefetch_depth: int | None = 1) -> TuckerResult:
     """Single-pass streaming Tucker of a tensor that arrives as slabs along
     axis 0 (out-of-core tensors, token/frame streams).
 
-    ``slabs`` is an iterable of ``A[off:off+b, ...]`` slabs in order, tiling
-    axis 0 exactly; ``dims`` is the full tensor shape.  Never holds more
-    than one slab plus the O(sum_i I_i·J_i) sketch state — the per-mode
-    Omega_i (whose row count is prod_{j!=i} I_j, the *largest* object in
-    one-shot RP-HOSVD) is regenerated block-wise in-kernel and never
-    materialized (repro.stream.tucker).
+    ``slabs`` is anything ``stream.as_tile_source`` accepts — a
+    ``TileSource`` (memmapped ``.npy``, directory of shards, in-memory
+    array) or a plain iterable of ``A[off:off+b, ...]`` slabs in order,
+    tiling axis 0 exactly.  ``dims`` (the full tensor shape) may be omitted
+    when the source knows it; slabs are double-buffer prefetched
+    (DESIGN.md §11, ``prefetch_depth=None`` disables).  Never holds more
+    than ``prefetch_depth + 1`` slabs plus the O(sum_i I_i·J_i) sketch
+    state — the per-mode Omega_i (whose row count is prod_{j!=i} I_j, the
+    *largest* object in one-shot RP-HOSVD) is regenerated block-wise
+    in-kernel and never materialized (repro.stream.tucker).
     """
     from repro import stream  # deferred: stream imports this module
+    if ranks is None:
+        raise TypeError("rp_sthosvd_streamed missing required ranks")
+    try:
+        src = stream.as_tile_source(
+            slabs, shape=tuple(int(d) for d in dims) if dims is not None
+            else None)
+    except ValueError as e:
+        if dims is None and "shape" in str(e):
+            raise ValueError(
+                "this slab stream cannot be inspected for its shape: pass "
+                "dims= (or stream from a TileSource/array/.npy path, "
+                "which knows its shape)") from e
+        raise
+    if dims is not None and tuple(int(d) for d in dims) != src.shape:
+        raise ValueError(f"dims={tuple(dims)} but the slab source has "
+                         f"shape {src.shape}")
+    dims = src.shape
     ts = stream.tucker_init(key, dims, ranks, method=method, dist=dist,
                             omega_dtype=omega_dtype)
     off = 0
-    for slab in slabs:
+    for slab in stream.source_tiles(src, prefetch_depth=prefetch_depth):
         ts = stream.tucker_update(ts, slab, off)
         off += slab.shape[0]
     if off != dims[0]:

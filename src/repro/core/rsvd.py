@@ -67,49 +67,83 @@ def rsvd(key: jax.Array, a: jax.Array, rank: int, *, oversample: int = 10,
     return SVDResult(u[:, :rank], s[:rank], vt[:rank, :])
 
 
-def rsvd_streamed(key: jax.Array, a_blocks, rank: int, *, n_rows: int,
-                  n_cols: int, oversample: int = 10, passes: int = 2,
+def rsvd_streamed(key: jax.Array, a_blocks, rank: int, *,
+                  n_rows: int | None = None, n_cols: int | None = None,
+                  oversample: int = 10, passes: int = 2,
                   method: proj.ProjectionMethod = "shgemm_fused",
-                  omega_dtype=jnp.bfloat16,
-                  tile_callback=None) -> SVDResult:
+                  omega_dtype=jnp.bfloat16, tile_callback=None,
+                  prefetch_depth: int | None = 1) -> SVDResult:
     """Randomized SVD of an out-of-core matrix streamed as row tiles.
 
-    ``a_blocks`` is an iterable of row tiles (in order, tiling the matrix
-    exactly), or a zero-arg callable returning one — pass a callable (or a
-    replayable sequence) for the default two-pass variant, which needs to
-    see the tiles twice.  Never holds more than one tile of A plus
-    O((m+n)·p) sketch/factor state (Y and Q are (n_rows, p_hat); B and the
-    single-pass W are p-by-n — p/n of A, but not m-free for tall
-    matrices); the sketch accumulates through ``repro.stream``,
-    so Omega costs zero HBM bytes with ``method="shgemm_fused"`` and each
-    tile's sketch rows are bit-identical to one-shot sketching of the
-    concatenated matrix.
+    ``a_blocks`` is anything ``stream.as_tile_source`` accepts: a
+    ``TileSource`` (in-memory array, ``.npy`` memmap, directory of ``.npy``
+    shards, generator factory), a plain sequence of row tiles, a zero-arg
+    callable returning a fresh tile iterator, or — for ``passes=1`` only —
+    a bare one-shot generator.  ``n_rows``/``n_cols`` may be omitted when
+    the source knows its shape (everything but bare generators/callables).
+    Tiles are double-buffer prefetched (background IO + host→device overlap,
+    ``prefetch_depth=None`` disables).  Never holds more than
+    ``prefetch_depth + 1`` tiles of A plus O((m+n)·p) sketch/factor state;
+    the sketch accumulates through ``repro.stream``, so Omega costs zero
+    HBM bytes with ``method="shgemm_fused"`` and each tile's sketch rows
+    are bit-identical to one-shot sketching of the concatenated matrix.
 
-    passes=2 (default): stream the sketch, orthonormalize to Q, then replay
-    the tiles once to accumulate B = Q^T A — numerically identical to
-    ``rsvd`` up to f32 summation order (its exact Line-3 computation,
-    tiled).  passes=1: strict single pass, finalized from the (Y, W)
-    sketches alone (Tropp et al. 2017) — slightly looser accuracy, for
-    streams that cannot be replayed.
+    ``passes`` = number of streams over the tiles (DESIGN.md §11.3):
+
+      * 1 — strict single pass, finalized from the (Y, W) sketches alone
+        (Tropp et al. 2017); loosest accuracy, for unreplayable streams.
+      * 2 (default) — sketch, orthonormalize to Q, replay once for
+        B = Q^T A: numerically identical to ``rsvd(power_iters=0)`` up to
+        f32 summation order.
+      * >= 3 — streamed power iteration on the replayable source: each
+        extra pass applies one more A (alternating Z = A^T·Q and Y = A·Z
+        with re-orthonormalization, A never materialized).
+        ``passes = 2 + 2q`` reproduces ``rsvd(power_iters=q)``'s exact
+        iteration; odd counts finalize from the column basis via
+        A·Z = Q·R ⇒ A ≈ Q·R·Z^T at no extra pass.  Bit-deterministic for
+        a fixed tiling: pass 1 draws Omega from the fused
+        (key, global offset) lattice, and every later pass is a plain
+        tiled GEMM accumulated in tile order.
 
     ``tile_callback(i, n_seen_rows)``, if given, is invoked per absorbed
-    tile (progress/bookkeeping for multi-hour out-of-core runs).
+    tile of the sketch pass (progress for multi-hour out-of-core runs).
     """
     from repro import stream  # deferred: stream imports this module's result
-    if passes not in (1, 2):
-        raise ValueError(f"passes must be 1 or 2, got {passes}")
-    if passes == 2 and not callable(a_blocks) and iter(a_blocks) is a_blocks:
+    if passes < 1:
+        raise ValueError(f"passes must be >= 1, got {passes}")
+    shape = ((int(n_rows), int(n_cols))
+             if n_rows is not None and n_cols is not None else None)
+    try:
+        src = stream.as_tile_source(a_blocks, shape=shape)
+    except ValueError as e:
+        if shape is None and "shape" in str(e):
+            # translate the internal shape= requirement into this API's
+            # kwargs — a single n_rows or n_cols alone is not enough
+            raise ValueError(
+                "this tile stream cannot be inspected for its shape: pass "
+                "BOTH n_rows= and n_cols= (or stream from a "
+                "TileSource/array/.npy path, which knows its shape)") from e
+        raise
+    if n_rows is not None and int(n_rows) != src.n_rows:
+        raise ValueError(f"n_rows={n_rows} but the tile source has "
+                         f"{src.n_rows} rows")
+    if n_cols is not None and int(n_cols) != src.n_cols:
+        raise ValueError(f"n_cols={n_cols} but the tile source has "
+                         f"{src.n_cols} columns")
+    n_rows, n_cols = src.n_rows, src.n_cols
+    if passes >= 2 and not src.replayable:
         # fail BEFORE streaming: a bare generator would be consumed by the
         # first pass and the error would otherwise land hours into an
         # out-of-core run
         raise ValueError(
-            "passes=2 must replay the tile stream: pass a sequence or a "
-            "zero-arg callable returning a fresh iterator (or use passes=1 "
+            f"passes={passes} must replay the tile stream: pass a "
+            "replayable TileSource (array / memmap / directory-of-npy / "
+            "zero-arg factory) or a sequence of tiles (or use passes=1 "
             "for the strict single-pass finalizer)")
 
     def tiles():
-        it = a_blocks() if callable(a_blocks) else a_blocks
         off = 0
+        it = stream.source_tiles(src, prefetch_depth=prefetch_depth)
         for i, blk in enumerate(it):
             yield i, off, blk
             off += blk.shape[0]
@@ -127,13 +161,64 @@ def rsvd_streamed(key: jax.Array, a_blocks, rank: int, *, n_rows: int,
     if passes == 1:
         return stream.svd(state, rank)
 
-    q = stream.range_basis(state)                      # (n_rows, p_hat)
-    b = jnp.zeros((p_hat, n_cols), jnp.float32)
-    for _, off, blk in tiles():                        # Line 3, tiled
-        b = b + _dot(q[off:off + blk.shape[0]].T, blk.astype(jnp.float32))
-    u_b, s, vt = jnp.linalg.svd(b, full_matrices=False)
-    u = _dot(q, u_b)
-    return SVDResult(u[:, :rank], s[:rank], vt[:rank, :])
+    def accumulate_b(q):
+        b = jnp.zeros((p_hat, n_cols), jnp.float32)
+        for _, off, blk in tiles():                    # B = Q^T A, tiled
+            b = b + _dot(q[off:off + blk.shape[0]].T,
+                         blk.astype(jnp.float32))
+        return b
+
+    def accumulate_y(z):
+        # tiles cover the rows in order, so Y = A·Z is the concatenation of
+        # per-tile products — O(m·p) total, where an eager .at[].set per
+        # tile would copy the whole Y buffer n_tiles times
+        return jnp.concatenate([_dot(blk.astype(jnp.float32), z)
+                                for _, _, blk in tiles()], axis=0)
+
+    return streamed_power_factor(stream.range_basis(state), rank, passes,
+                                 accumulate_b=accumulate_b,
+                                 accumulate_y=accumulate_y)
+
+
+def streamed_power_factor(q: jax.Array, rank: int, passes: int, *,
+                          accumulate_b, accumulate_y) -> SVDResult:
+    """Shared multi-pass driver for streamed power iteration
+    (DESIGN.md §11.3): alternate row-space basis Q (m, p) and column-space
+    basis Z (n, p), one stream over the tiles per pass, starting from the
+    orthonormal sketch basis ``q``.  The B = Q^T A accumulation doubles as
+    Z = A^T Q = B^T, so each power half-step costs exactly one pass; an
+    odd final pass factorizes from the column basis for free via
+    A·Z = Q·R ⇒ A ≈ A Z Z^T = Q R Z^T (Z orthonormal).
+
+    ``accumulate_b(q)`` streams once and returns B = Q^T A (p, n);
+    ``accumulate_y(z)`` streams once and returns Y = A·Z (m, p).  The
+    callbacks own distribution: single-host tile loops in
+    ``rsvd_streamed``, per-host partials + one psum in
+    ``distributed_rsvd_streamed`` — both share this exact algebra, so the
+    two paths cannot drift numerically.
+    """
+    z = None
+    on_rows = True
+    for pass_idx in range(2, passes + 1):
+        last = pass_idx == passes
+        if on_rows:
+            b = accumulate_b(q)
+            if last:
+                u_b, s, vt = jnp.linalg.svd(b, full_matrices=False)
+                u = _dot(q, u_b)
+                return SVDResult(u[:, :rank], s[:rank], vt[:rank, :])
+            z, _ = jnp.linalg.qr(b.T)                  # orth(A^T Q)
+            on_rows = False
+        else:
+            y = accumulate_y(z)
+            if last:
+                q, r = jnp.linalg.qr(y)
+                u_r, s, wt = jnp.linalg.svd(r, full_matrices=False)
+                return SVDResult(_dot(q, u_r)[:, :rank], s[:rank],
+                                 _dot(wt, z.T)[:rank, :])
+            q, _ = jnp.linalg.qr(y)
+            on_rows = True
+    raise AssertionError("unreachable")  # loop always returns on last pass
 
 
 @functools.partial(jax.jit, static_argnames=("rank", "oversample", "method",

@@ -73,3 +73,52 @@ class MemmapTokens:
 
 def write_token_file(path: str | Path, tokens: np.ndarray) -> None:
     np.asarray(tokens, np.int32).tofile(path)
+
+
+# ---------------------------------------------------------------------------
+# Out-of-core matrix layout (repro.stream tile sources)
+# ---------------------------------------------------------------------------
+
+def write_matrix_npy(path: str | Path, a, dtype=np.float32) -> Path:
+    """Write a matrix/tensor as one ``.npy`` file — the
+    ``stream.MemmapSource`` layout (single-host out-of-core)."""
+    path = Path(path)
+    np.save(path, np.asarray(a, dtype))
+    return path
+
+
+def write_matrix_shards(dirpath: str | Path, a, rows_per_shard: int,
+                        dtype=np.float32) -> list[Path]:
+    """Write a matrix/tensor as a directory of axis-0 ``.npy`` row shards —
+    the ``stream.DirectorySource`` / object-store layout (one blob per
+    shard, sorted filename order == row order).  The last shard is ragged
+    when ``rows_per_shard`` does not divide the row count."""
+    if rows_per_shard < 1:
+        raise ValueError(f"rows_per_shard must be >= 1, got {rows_per_shard}")
+    dirpath = Path(dirpath)
+    dirpath.mkdir(parents=True, exist_ok=True)
+    # clear ALL previous .npy files — DirectorySource globs *.npy, so a
+    # stale shard (shorter rewrite), a mixed-width name, or a leftover
+    # write_matrix_npy file would be silently concatenated as matrix rows
+    for old in dirpath.glob("*.npy"):
+        old.unlink()
+    a = np.asarray(a, dtype)
+    n_shards = -(-a.shape[0] // rows_per_shard)
+    # pad indices wide enough that lexicographic order (what
+    # DirectorySource sorts by) == numeric order at ANY shard count —
+    # fixed %05d would silently permute rows beyond 100k shards
+    width = max(5, len(str(max(n_shards - 1, 0))))
+    paths = []
+    for i, off in enumerate(range(0, a.shape[0], rows_per_shard)):
+        p = dirpath / f"shard_{i:0{width}d}.npy"
+        np.save(p, a[off:off + rows_per_shard])
+        paths.append(p)
+    return paths
+
+
+def matrix_tile_source(path: str | Path, tile_rows: int = 256):
+    """Open a ``write_matrix_npy`` file or ``write_matrix_shards`` directory
+    as a replayable ``stream.TileSource`` (memmapped: resident set is one
+    tile, never the matrix)."""
+    from repro import stream  # deferred: keep the data layer import-light
+    return stream.as_tile_source(Path(path), tile_rows=tile_rows)

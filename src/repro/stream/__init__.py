@@ -1,20 +1,28 @@
 """Streaming sketch engine: single-pass, out-of-core RandNLA on the
-zero-HBM fused kernel (DESIGN.md §10).
+zero-HBM fused kernel (DESIGN.md §10, §11).
 
 State + update/merge algebra:  state.py  (SketchState, init, update,
-update_cols, merge).  Matrix finalizers: finalize.py (svd, range_basis).
-Streaming Tucker: tucker.py (TuckerSketch, tucker_init/update/merge and the
-``tucker`` finalizer).
+update_cols, merge, merge_across_hosts).  Matrix finalizers: finalize.py
+(svd, range_basis).  Streaming Tucker: tucker.py (TuckerSketch,
+tucker_init/update/merge and the ``tucker`` finalizer).  Tile IO:
+source.py (TileSource — array / memmap / directory / generator — with
+double-buffered async prefetch and the replayability contract multi-pass
+consumers rely on).
 
-Consumers: core/rsvd.py ``rsvd_streamed`` (out-of-core matrices),
-serve/kv_compress.py (incremental KV compression), optim/compression.py
-(gradient-sketch accumulation over microbatches), core/hosvd.py
-``rp_sthosvd_streamed``.
+Consumers: core/rsvd.py ``rsvd_streamed`` (out-of-core matrices, power
+iteration over replayable sources), core/distributed.py
+``distributed_rsvd_streamed`` (multi-host × out-of-core via
+``merge_across_hosts``), serve/kv_compress.py (incremental KV compression),
+optim/compression.py (gradient-sketch accumulation over microbatches),
+core/hosvd.py ``rp_sthosvd_streamed``.
 """
 
-from repro.stream.state import (SketchState, init, merge, update,
-                                update_cols)
+from repro.stream.state import (SketchState, init, merge, merge_across_hosts,
+                                update, update_cols)
 from repro.stream.finalize import range_basis, svd
+from repro.stream.source import (ArraySource, DirectorySource,
+                                 GeneratorSource, MemmapSource, TileSource,
+                                 as_tile_source, prefetch, source_tiles)
 from repro.stream.tucker import (TuckerSketch, tucker, tucker_finalize,
                                  tucker_init, tucker_merge, tucker_update)
 
@@ -24,7 +32,10 @@ range = range_basis  # noqa: A001
 
 __all__ = [
     "SketchState", "init", "update", "update_cols", "merge",
+    "merge_across_hosts",
     "svd", "range", "range_basis",
+    "TileSource", "ArraySource", "MemmapSource", "DirectorySource",
+    "GeneratorSource", "as_tile_source", "prefetch", "source_tiles",
     "TuckerSketch", "tucker", "tucker_finalize", "tucker_init",
     "tucker_merge", "tucker_update",
 ]

@@ -1,0 +1,357 @@
+"""Tile sources: where out-of-core row tiles come from, and how they reach
+the device.
+
+``repro.stream`` defines *what* a streamed sketch is (state.py — linear,
+bit-deterministic accumulation); this module defines *where the tiles come
+from*.  A :class:`TileSource` is a replayable-or-not factory of axis-0 row
+tiles over a fixed underlying array:
+
+  * :class:`ArraySource`      — in-memory array (numpy or jax), re-tiled.
+  * :class:`MemmapSource`     — an ``.npy`` file opened with ``np.memmap``
+    semantics (``np.load(mmap_mode="r")``): tiles are read lazily, so the
+    resident set is one tile, never the matrix.
+  * :class:`DirectorySource`  — a directory of ``.npy`` row shards (the
+    object-store layout: one shard per blob), concatenated in sorted
+    filename order; each shard is itself memmapped and re-tiled.
+  * :class:`GeneratorSource`  — a zero-arg factory of fresh tile iterators
+    (replayable) or a bare one-shot iterator (not replayable).
+
+All sources yield tiles in row order, tiling axis 0 exactly; any row tiling
+produces a bit-identical ``SketchState`` (DESIGN.md §10.2 — row-tile updates
+have write semantics), which the conformance suite
+(tests/test_stream_source.py) pins for every source kind × projection
+method.
+
+Prefetch (DESIGN.md §11): :func:`prefetch` wraps any tile iterator with a
+background reader thread and a bounded queue, overlapping host IO (+ the
+host→device transfer via ``jax.device_put``) with the consumer's sketch
+math.  Memory bound: at most ``depth`` tiles queued + 1 under construction
+in the reader — the default ``depth=1`` keeps ≤ 2 tiles resident beyond the
+one being consumed.
+"""
+
+from __future__ import annotations
+
+import math
+import queue
+import threading
+from pathlib import Path
+from typing import Callable, Iterable, Iterator, Optional, Sequence, Union
+
+import jax
+import numpy as np
+
+__all__ = [
+    "TileSource", "ArraySource", "MemmapSource", "DirectorySource",
+    "GeneratorSource", "as_tile_source", "prefetch",
+]
+
+DEFAULT_TILE_ROWS = 256
+
+
+class TileSource:
+    """Base class: a (re)playable stream of axis-0 tiles of one array.
+
+    Subclasses set ``shape`` (the full underlying array shape) and implement
+    ``tiles()`` returning a fresh iterator of row tiles.  ``replayable``
+    says whether ``tiles()`` may be called more than once — the contract
+    multi-pass consumers (``rsvd_streamed(passes>=2)``) depend on.
+    """
+
+    shape: tuple[int, ...] = ()
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.shape[0])
+
+    @property
+    def n_cols(self) -> int:
+        """Width of the axis-0 unfolding (== shape[1] for matrices)."""
+        return int(math.prod(self.shape[1:]))
+
+    @property
+    def replayable(self) -> bool:
+        return True
+
+    def tiles(self) -> Iterator:
+        raise NotImplementedError
+
+    def __iter__(self) -> Iterator:
+        return self.tiles()
+
+
+def _chunk(array, tile_rows: int) -> Iterator:
+    for off in range(0, array.shape[0], tile_rows):
+        yield array[off:off + tile_rows]
+
+
+class ArraySource(TileSource):
+    """In-memory array re-tiled into ``tile_rows`` row tiles (ragged last
+    tile when ``tile_rows`` does not divide the row count)."""
+
+    def __init__(self, array, tile_rows: int = DEFAULT_TILE_ROWS):
+        if array.ndim < 2:
+            raise ValueError(f"tile sources need ndim >= 2 arrays, got "
+                             f"shape {array.shape}")
+        if tile_rows < 1:
+            raise ValueError(f"tile_rows must be >= 1, got {tile_rows}")
+        self._array = array
+        self.tile_rows = int(tile_rows)
+        self.shape = tuple(int(s) for s in array.shape)
+
+    def tiles(self) -> Iterator:
+        return _chunk(self._array, self.tile_rows)
+
+
+class MemmapSource(TileSource):
+    """An ``.npy`` file on disk, memory-mapped: each ``tiles()`` replay
+    re-opens the map, each tile is a lazy view — the OS pages in one tile's
+    worth of the file at a time, so peak resident stays O(tile), not O(A).
+    """
+
+    def __init__(self, path: Union[str, Path],
+                 tile_rows: int = DEFAULT_TILE_ROWS):
+        self.path = Path(path)
+        if tile_rows < 1:
+            raise ValueError(f"tile_rows must be >= 1, got {tile_rows}")
+        self.tile_rows = int(tile_rows)
+        header = np.load(self.path, mmap_mode="r")
+        if header.ndim < 2:
+            raise ValueError(f"{self.path}: tile sources need ndim >= 2 "
+                             f"arrays, got shape {header.shape}")
+        self.shape = tuple(int(s) for s in header.shape)
+        del header
+
+    def tiles(self) -> Iterator:
+        mm = np.load(self.path, mmap_mode="r")
+
+        def gen():
+            for off in range(0, mm.shape[0], self.tile_rows):
+                # np.array COPIES the tile (np.asarray on a memmap slice
+                # shares memory!) so the disk page-in happens here, in the
+                # prefetch thread — a lazy view would page inside the
+                # consumer's kernel, killing the IO/compute overlap.
+                yield np.array(mm[off:off + self.tile_rows])
+        return gen()
+
+
+class DirectorySource(TileSource):
+    """A directory of ``.npy`` row shards, concatenated in sorted filename
+    order (the object-store layout: one shard per blob).
+
+    Shards may have unequal row counts; trailing dims must agree.  Tiles
+    never cross shard boundaries (each shard is memmapped and re-tiled
+    independently), so a shard's tail tile may be ragged — bit-identity of
+    the resulting sketch is unaffected (row tiling is free, DESIGN.md §10.2).
+    """
+
+    def __init__(self, path: Union[str, Path],
+                 tile_rows: int = DEFAULT_TILE_ROWS, pattern: str = "*.npy"):
+        self.path = Path(path)
+        if tile_rows < 1:
+            raise ValueError(f"tile_rows must be >= 1, got {tile_rows}")
+        self.tile_rows = int(tile_rows)
+        self.files = sorted(self.path.glob(pattern))
+        if not self.files:
+            raise ValueError(f"no {pattern} shards in {self.path}")
+        rows, trailing = 0, None
+        for f in self.files:
+            hdr = np.load(f, mmap_mode="r")
+            if hdr.ndim < 2:
+                raise ValueError(f"{f}: tile sources need ndim >= 2 arrays, "
+                                 f"got shape {hdr.shape}")
+            if trailing is None:
+                trailing = hdr.shape[1:]
+            elif hdr.shape[1:] != trailing:
+                raise ValueError(
+                    f"shard {f.name} has trailing shape {hdr.shape[1:]}, "
+                    f"expected {trailing} (all shards must agree)")
+            rows += hdr.shape[0]
+            del hdr
+        self.shape = (rows,) + tuple(int(s) for s in trailing)
+
+    def tiles(self) -> Iterator:
+        def gen():
+            for f in self.files:
+                mm = np.load(f, mmap_mode="r")
+                for off in range(0, mm.shape[0], self.tile_rows):
+                    # np.array copies (asarray would share the mmap view)
+                    yield np.array(mm[off:off + self.tile_rows])
+        return gen()
+
+
+class GeneratorSource(TileSource):
+    """Tiles from user code: a zero-arg factory returning a fresh iterator
+    per ``tiles()`` call (replayable), or a bare iterator/generator that can
+    be consumed exactly once (``replayable == False`` — single-pass
+    consumers only).
+
+    ``shape`` must be given: a generator cannot be inspected without
+    consuming it.
+    """
+
+    def __init__(self, tiles_or_factory, shape: Sequence[int]):
+        self.shape = tuple(int(s) for s in shape)
+        if len(self.shape) < 2:
+            raise ValueError(f"tile sources need ndim >= 2 shapes, got "
+                             f"{self.shape}")
+        self._factory: Optional[Callable[[], Iterable]] = None
+        self._once: Optional[Iterator] = None
+        if callable(tiles_or_factory):
+            self._factory = tiles_or_factory
+        else:
+            self._once = iter(tiles_or_factory)
+
+    @property
+    def replayable(self) -> bool:
+        return self._factory is not None
+
+    def tiles(self) -> Iterator:
+        if self._factory is not None:
+            return iter(self._factory())
+        it, self._once = self._once, None
+        if it is None:
+            raise ValueError(
+                "this GeneratorSource wraps a bare iterator and has already "
+                "been consumed; pass a zero-arg factory for replayability")
+        return it
+
+
+def as_tile_source(obj, *, tile_rows: int = DEFAULT_TILE_ROWS,
+                   shape: Optional[Sequence[int]] = None) -> TileSource:
+    """Coerce ``obj`` into a :class:`TileSource`.
+
+      TileSource            -> itself (tile_rows/shape ignored)
+      array (ndim >= 2)     -> ArraySource
+      str/Path to a file    -> MemmapSource  (.npy)
+      str/Path to a dir     -> DirectorySource
+      callable              -> GeneratorSource (replayable; needs ``shape``)
+      sequence of tiles     -> GeneratorSource (replayable via re-iteration;
+                               shape inferred cheaply, tiles are in memory)
+      re-iterable container -> GeneratorSource (replayable: a fresh
+                               ``iter()`` per pass; needs ``shape`` —
+                               inference would cost a full extra pass)
+      bare iterator         -> GeneratorSource (one-shot; needs ``shape``)
+    """
+    if isinstance(obj, TileSource):
+        return obj
+    if isinstance(obj, (str, Path)):
+        p = Path(obj)
+        return (DirectorySource(p, tile_rows) if p.is_dir()
+                else MemmapSource(p, tile_rows))
+    if hasattr(obj, "ndim") and hasattr(obj, "shape"):
+        return ArraySource(obj, tile_rows)
+    if callable(obj):
+        if shape is None:
+            raise ValueError("a callable tile factory needs an explicit "
+                             "shape=(n_rows, n_cols, ...)")
+        return GeneratorSource(obj, shape)
+    if isinstance(obj, Sequence):
+        if shape is None:
+            tiles = list(obj)
+            rows = sum(int(t.shape[0]) for t in tiles)
+            if not tiles:
+                raise ValueError("cannot infer shape from an empty tile "
+                                 "sequence; pass shape=")
+            shape = (rows,) + tuple(tiles[0].shape[1:])
+            obj = tiles
+        seq = obj
+        return GeneratorSource(lambda: iter(seq), shape)
+    if isinstance(obj, (Iterator, Iterable)):
+        it = iter(obj)
+        if it is not obj:
+            # re-iterable container (custom __iter__ returning a fresh
+            # iterator): replayable — multi-pass callers that handed these
+            # straight to rsvd_streamed(passes=2) must keep working.
+            # ``shape`` stays required: inferring it would silently burn a
+            # full extra pass over out-of-core data.
+            if shape is None:
+                raise ValueError("a re-iterable tile container needs an "
+                                 "explicit shape=(n_rows, n_cols, ...) — "
+                                 "inferring it would cost a full extra "
+                                 "pass over the tiles")
+            return GeneratorSource(lambda: iter(obj), shape)
+        if shape is None:
+            raise ValueError("a bare tile iterator needs an explicit "
+                             "shape=(n_rows, n_cols, ...)")
+        return GeneratorSource(it, shape)
+    raise TypeError(f"cannot build a TileSource from {type(obj).__name__}")
+
+
+_DONE = object()
+
+
+def prefetch(tiles: Iterable, depth: int = 1, *,
+             to_device: bool = True) -> Iterator:
+    """Double-buffered async prefetch over a tile iterator.
+
+    A daemon reader thread pulls tiles (host IO: memmap page-in, shard
+    ``np.load``) and — when ``to_device`` — starts their asynchronous
+    host→device transfer with ``jax.device_put``, parking results in a
+    bounded queue.  The consumer overlaps its sketch math with the next
+    tile's IO+transfer.  Memory bound: ``depth`` queued + 1 in the reader's
+    hands ⇒ at most ``depth + 1`` tiles resident beyond the consumed one
+    (``depth=1`` is classic double buffering, DESIGN.md §11).
+
+    Reader exceptions are re-raised at the consumer's next pull; closing the
+    generator early (e.g. breaking out of the loop) unblocks and stops the
+    reader.
+    """
+    if depth < 1:
+        raise ValueError(f"prefetch depth must be >= 1, got {depth}")
+    q: queue.Queue = queue.Queue(maxsize=depth)
+    stop = threading.Event()
+
+    def put_or_stop(item) -> bool:
+        """Blocking put that aborts when the consumer went away — EVERY
+        reader put must go through this, or an abandoned stream (consumer
+        raised / broke out) leaves the thread blocked forever pinning its
+        queued tile."""
+        while not stop.is_set():
+            try:
+                q.put(item, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def reader():
+        try:
+            for tile in tiles:
+                if to_device:
+                    try:
+                        tile = jax.device_put(tile)
+                    except (TypeError, ValueError):
+                        pass  # non-array tile: hand through untouched.
+                        # Anything else (device OOM, runtime errors) falls
+                        # through to the outer handler and re-raises at the
+                        # consumer — not silently retried on its thread.
+                if not put_or_stop(tile):
+                    return
+            put_or_stop(_DONE)
+        except BaseException as e:  # noqa: BLE001 — re-raised consumer-side
+            put_or_stop(e)
+
+    t = threading.Thread(target=reader, daemon=True,
+                         name="repro-stream-prefetch")
+    t.start()
+    try:
+        while True:
+            item = q.get()
+            if item is _DONE:
+                return
+            if isinstance(item, BaseException):
+                raise item
+            yield item
+    finally:
+        stop.set()
+
+
+def source_tiles(src: TileSource, *, prefetch_depth: Optional[int] = 1,
+                 to_device: bool = True) -> Iterator:
+    """One pass over ``src``'s tiles, prefetched unless
+    ``prefetch_depth is None``."""
+    it = src.tiles()
+    if prefetch_depth is None:
+        return iter(it)
+    return prefetch(it, depth=prefetch_depth, to_device=to_device)

@@ -185,6 +185,24 @@ def _left_update(state: SketchState, a_block: jax.Array,
     return inc.T  # (l, n_cols)
 
 
+def _check_offset(off, extent: int, limit: int, what: str,
+                  name: str) -> None:
+    """Concrete-offset bounds check: ``jax.lax.dynamic_update_slice`` CLAMPS
+    out-of-range offsets, which would silently overwrite earlier rows/cols
+    instead of failing.  Traced offsets (scan carries) pass through — the
+    caller owns bounds there (DESIGN.md §10.1)."""
+    try:
+        off = int(off)
+    except (jax.errors.TracerIntegerConversionError, TypeError):
+        return
+    if off < 0:
+        raise ValueError(f"{name}={off} must be >= 0")
+    if off + extent > limit:
+        raise ValueError(f"{name}={off} + tile {what} {extent} overruns "
+                         f"{limit} — the update would be clamped, "
+                         f"overwriting other rows")
+
+
 def update(state: SketchState, a_block: jax.Array,
            row_offset) -> SketchState:
     """Absorb a full-width row tile ``a_block = A[row_offset:row_offset+b]``.
@@ -196,11 +214,16 @@ def update(state: SketchState, a_block: jax.Array,
     its bits depend on arrival order only through f32 addition order.
     """
     a_block = a_block.astype(jnp.float32)
+    if a_block.ndim != 2:
+        raise ValueError(f"update takes a 2-D row tile, got shape "
+                         f"{a_block.shape}; stream tensors through "
+                         f"stream.tucker or unfold them first")
     b, n = a_block.shape
     if n != state.n_cols:
         raise ValueError(f"row tile has {n} columns, state expects "
                          f"{state.n_cols}; use update_cols for partial-width "
                          f"tiles")
+    _check_offset(row_offset, b, state.max_rows, "height", "row_offset")
     off = jnp.asarray(row_offset, jnp.int32)
     y = jax.lax.dynamic_update_slice(state.y, _sketch_rows(state, a_block),
                                      (off, jnp.int32(0)))
@@ -225,9 +248,14 @@ def update_cols(state: SketchState, a_block: jax.Array, row_offset,
     (each element covered once).
     """
     a_block = a_block.astype(jnp.float32)
+    if a_block.ndim != 2:
+        raise ValueError(f"update_cols takes a 2-D tile, got shape "
+                         f"{a_block.shape}")
     br, bc = a_block.shape
     if bc > state.n_cols:
         raise ValueError(f"tile has {bc} columns > n_cols={state.n_cols}")
+    _check_offset(row_offset, br, state.max_rows, "height", "row_offset")
+    _check_offset(col_offset, bc, state.n_cols, "width", "col_offset")
     r0 = jnp.asarray(row_offset, jnp.int32)
     c0 = jnp.asarray(col_offset, jnp.int32)
 
@@ -275,7 +303,14 @@ def _materialize_omega(state: SketchState) -> jax.Array:
 
 
 def _meta_mismatch(s1: SketchState, s2: SketchState) -> str | None:
-    for f in ("n_cols", "p", "l", "method", "dist", "omega_dtype"):
+    """Name of the first config field that differs, or None.
+
+    Checks the static meta fields AND the shape-derived ones (``max_rows``
+    from y.shape, left-sketch presence from w) — shapes are static even for
+    traced arrays, so a mismatched pair fails with the differing field named
+    instead of a downstream broadcast/Pallas shape error."""
+    for f in ("n_cols", "p", "l", "method", "dist", "omega_dtype",
+              "max_rows"):
         if getattr(s1, f) != getattr(s2, f):
             return f
     return None
@@ -317,3 +352,34 @@ def merge(s1: SketchState, s2: SketchState) -> SketchState:
     return dataclasses.replace(
         s1, y=s1.y + s2.y, w=w,
         rows_seen=jnp.maximum(s1.rows_seen, s2.rows_seen))
+
+
+def merge_across_hosts(state: SketchState, axis_name: str, *,
+                       check_keys: bool = True) -> SketchState:
+    """Collective ``merge``: combine the per-host states of a data-parallel
+    group into the global sketch, inside ``shard_map``/``pmap`` over
+    ``axis_name`` (multi-host × out-of-core, DESIGN.md §11.4).
+
+    Linearity makes this a plain ``psum`` of Y (and W): for disjoint row
+    coverage it equals sequential single-host accumulation bit for bit,
+    because every other host's rows of Y are exactly zero.  Static meta
+    congruence (n_cols/p/l/method/dist/max_rows) is structural under SPMD —
+    every participant traced the same program, so a mismatch cannot reach
+    this call.  The PRNG keys are *data* and CAN diverge across hosts
+    (e.g. a host folded in its rank); with ``check_keys`` the result is
+    poisoned to NaN when any host's keys differ — a loud failure instead of
+    a silently meaningless sum of sketches from different random subspaces.
+    """
+    y = jax.lax.psum(state.y, axis_name)
+    w = jax.lax.psum(state.w, axis_name) if state.w is not None else None
+    rows_seen = jax.lax.pmax(state.rows_seen, axis_name)
+    if check_keys:
+        same = jnp.all(jax.lax.pmax(state.key_omega, axis_name)
+                       == jax.lax.pmin(state.key_omega, axis_name))
+        if state.key_psi is not None:
+            same &= jnp.all(jax.lax.pmax(state.key_psi, axis_name)
+                            == jax.lax.pmin(state.key_psi, axis_name))
+        poison = jnp.where(same, jnp.float32(0), jnp.float32(jnp.nan))
+        y = y + poison
+        w = None if w is None else w + poison
+    return dataclasses.replace(state, y=y, w=w, rows_seen=rows_seen)

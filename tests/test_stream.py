@@ -4,6 +4,8 @@ synthetic matrices, streaming Tucker, kernel offset plumbing, incremental
 KV compression (module + engine), and microbatch gradient-sketch
 accumulation."""
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -134,6 +136,52 @@ def test_merge_commutative_bitwise_and_associative():
     seq = _stream_rows(KEY, a, p, 32, left=True)
     np.testing.assert_array_equal(np.asarray(left.y), np.asarray(seq.y))
     assert int(left.rows_seen) == m
+
+
+def test_merge_reports_shape_level_mismatches():
+    """Regression (ISSUE 3): merging states whose ARRAY shapes disagree
+    must name the differing field — max_rows lives in y.shape, which is
+    static even for traced arrays — instead of dying on a downstream
+    broadcast error."""
+    s1 = stream.init(KEY, 64, 8, max_rows=96)
+    with pytest.raises(ValueError, match="max_rows differs"):
+        stream.merge(s1, stream.init(KEY, 64, 8, max_rows=64))
+
+    def traced_merge(y):
+        other = dataclasses.replace(
+            stream.init(KEY, 64, 8, max_rows=64), y=y)
+        return stream.merge(s1, other)
+
+    with pytest.raises(ValueError, match="max_rows differs"):
+        jax.jit(traced_merge)(jnp.zeros((64, 8)))
+
+
+def test_update_rejects_bad_tiles_clearly():
+    """Regression (ISSUE 3): column-count and rank mismatches raise a clear
+    ValueError naming n_cols — never a Pallas/dynamic-slice shape error —
+    and concrete out-of-range offsets fail instead of being silently
+    clamped onto other rows."""
+    a = jax.random.normal(jax.random.PRNGKey(20), (32, 64), jnp.float32)
+    st = stream.init(KEY, 48, 8, max_rows=96)
+    with pytest.raises(ValueError, match="64 columns.*48"):
+        stream.update(st, a, 0)
+    with pytest.raises(ValueError, match="2-D"):
+        stream.update(st, a[0], 0)
+    with pytest.raises(ValueError, match="overrun"):
+        stream.update(st, a[:, :48], 80)
+    with pytest.raises(ValueError, match=">= 0"):
+        stream.update(st, a[:, :48], -32)
+    with pytest.raises(ValueError, match="col_offset.*overrun"):
+        stream.update_cols(st, a[:16, :32], 0, 32)
+    with pytest.raises(ValueError, match="row_offset.*overrun"):
+        stream.update_cols(st, a[:16, :32], 88, 0)
+    # the error fires under jit too (shapes are static when traced)
+    with pytest.raises(ValueError, match="64 columns.*48"):
+        jax.jit(lambda blk: stream.update(st, blk, 0))(a)
+    # traced offsets still pass through (scan carries own alignment)
+    out = jax.jit(lambda off: stream.update(st, a[:, :48], off))(
+        jnp.asarray(32, jnp.int32))
+    assert int(out.rows_seen) == 64
 
 
 def test_merge_rejects_mismatched_states():

@@ -1,0 +1,354 @@
+"""Tile-source conformance suite (repro.stream.source, DESIGN.md §11).
+
+Pins the contract the out-of-core drivers rely on: every ``TileSource``
+kind — in-memory array, memmapped ``.npy``, directory-of-``.npy`` shards,
+generator — yields a bit-identical ``SketchState`` and a bit-identical
+``rsvd_streamed`` result to the in-memory one-shot path, for every
+projection method including ``shgemm_fused``, across ragged final tiles
+and tile sizes that do not divide the row count.  Also: prefetch
+semantics (ordering, exception propagation, early close), source
+coercion/validation, streamed power iteration vs in-core power-iterated
+``rsvd`` on the paper's §3.3 matrices (the acceptance criterion), and the
+memmapped streaming-Tucker path.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import stream
+from repro.core import hosvd, rsvd
+from repro.core import projection as proj
+from repro.data import pipeline
+
+jax.config.update("jax_platform_name", "cpu")
+
+KEY = jax.random.PRNGKey(42)
+ALL_METHODS = ["f32", "lowp_single", "shgemm", "shgemm3", "shgemm_pallas",
+               "shgemm_fused"]
+
+M, N, P, RANK = 96, 112, 16, 8
+TILE = 28      # does not divide M=96 -> ragged last tile of 12 rows
+SHARD = 56     # multiple of TILE, so directory tiling == flat tiling
+
+
+@pytest.fixture(scope="module")
+def matrix():
+    return np.asarray(jax.random.normal(jax.random.PRNGKey(1), (M, N),
+                                        jnp.float32))
+
+
+@pytest.fixture(scope="module")
+def disk(tmp_path_factory, matrix):
+    td = tmp_path_factory.mktemp("tiles")
+    npy = pipeline.write_matrix_npy(td / "a.npy", matrix)
+    shards = td / "shards"
+    paths = pipeline.write_matrix_shards(shards, matrix, SHARD)
+    assert len(paths) == 2 and paths[0].name < paths[1].name
+    return {"npy": npy, "dir": shards}
+
+
+def _kinds(matrix, disk, tile=TILE):
+    """One source of each kind, all tiling the same matrix with the same
+    (ragged) tile boundaries."""
+    m = matrix.shape[0]
+    return {
+        "array": stream.ArraySource(matrix, tile),
+        "memmap": stream.MemmapSource(disk["npy"], tile),
+        "directory": stream.DirectorySource(disk["dir"], tile),
+        "generator": stream.GeneratorSource(
+            lambda: (matrix[i:i + tile] for i in range(0, m, tile)),
+            matrix.shape),
+    }
+
+
+def _drain(src, method):
+    st = stream.init(KEY, src.n_cols, P, max_rows=src.n_rows, method=method)
+    off = 0
+    for blk in stream.source_tiles(src):
+        st = stream.update(st, blk, off)
+        off += blk.shape[0]
+    assert off == src.n_rows
+    return st
+
+
+# ---------------------------------------------------------------------------
+# The conformance property: every source kind == the in-memory one-shot path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ALL_METHODS)
+def test_every_source_kind_sketches_bit_identical(method, matrix, disk):
+    """SketchState from each source kind is bit-identical to one-shot
+    ``projection.sketch`` of the in-memory matrix — ragged last tile
+    included."""
+    oneshot = proj.sketch(KEY, jnp.asarray(matrix), P, method=method)
+    for name, src in _kinds(matrix, disk).items():
+        st = _drain(src, method)
+        np.testing.assert_array_equal(
+            np.asarray(st.y), np.asarray(oneshot),
+            err_msg=f"method={method} source={name}")
+
+
+def test_tile_size_sweep_fused(matrix, disk):
+    """Tile sizes that don't divide n_rows (incl. crossing the shard
+    boundary of the directory layout) all reproduce the one-shot bits."""
+    oneshot = proj.sketch(KEY, jnp.asarray(matrix), P, method="shgemm_fused")
+    for tile in (13, 28, 40, 96):
+        for name, src in _kinds(matrix, disk, tile=tile).items():
+            st = _drain(src, "shgemm_fused")
+            np.testing.assert_array_equal(
+                np.asarray(st.y), np.asarray(oneshot),
+                err_msg=f"tile={tile} source={name}")
+
+
+@pytest.mark.parametrize("method", ALL_METHODS)
+def test_rsvd_streamed_bit_identical_across_kinds(method, matrix, disk):
+    """rsvd_streamed output (u, s, vt) is bit-identical whatever the source
+    kind, because identical tile boundaries feed identical accumulation
+    order (the in-memory ArraySource is the reference)."""
+    ref = rsvd.rsvd_streamed(KEY, stream.ArraySource(matrix, TILE), RANK,
+                             method=method)
+    for name, src in _kinds(matrix, disk).items():
+        res = rsvd.rsvd_streamed(KEY, src, RANK, method=method)
+        for field, got, want in zip(res._fields, res, ref):
+            np.testing.assert_array_equal(
+                np.asarray(got), np.asarray(want),
+                err_msg=f"method={method} source={name} field={field}")
+
+
+def test_generator_source_is_single_pass_only(matrix):
+    gen = (matrix[i:i + TILE] for i in range(0, M, TILE))
+    src = stream.GeneratorSource(gen, matrix.shape)
+    assert not src.replayable
+    _drain(src, "shgemm_fused")
+    with pytest.raises(ValueError, match="already been consumed"):
+        src.tiles()
+    # and rsvd_streamed refuses it up front for any multi-pass request
+    gen2 = (matrix[i:i + TILE] for i in range(0, M, TILE))
+    with pytest.raises(ValueError, match="replay"):
+        rsvd.rsvd_streamed(KEY, gen2, RANK, n_rows=M, n_cols=N, passes=3)
+
+
+# ---------------------------------------------------------------------------
+# Streamed power iteration (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def _paper_matrix(name, n=256, r=20):
+    k = jax.random.PRNGKey(8)
+    if name == "type1":
+        return rsvd.matrix_type1(k, n=n, r=r)
+    return rsvd.matrix_type2(jax.random.fold_in(k, 1), n=n, r=r)
+
+
+@pytest.mark.parametrize("name", ["type1", "type2"])
+def test_memmap_power_iteration_matches_incore(name, tmp_path):
+    """Acceptance criterion: streamed power iteration from a memmap
+    TileSource reaches in-core ``rsvd(power_iters=1)`` reconstruction error
+    to <= 1e-5 on the paper's type1/type2 matrices.
+
+    ``passes = 2 + 2q`` reproduces ``power_iters=q``'s exact iteration
+    (tiled), and the odd count ``passes=3`` — one single re-stream applying
+    (A·A^T) to the basis — already lands within 1e-5 of it; ``passes=2``
+    stays the PR-2 contract (== ``power_iters=0`` to 1e-5)."""
+    a = _paper_matrix(name)
+    rank = 24
+    src = stream.MemmapSource(
+        pipeline.write_matrix_npy(tmp_path / "a.npy", np.asarray(a)),
+        tile_rows=64)
+    err_pi0 = float(rsvd.reconstruction_error(
+        a, rsvd.rsvd(KEY, a, rank, method="shgemm_fused")))
+    err_pi1 = float(rsvd.reconstruction_error(
+        a, rsvd.rsvd(KEY, a, rank, method="shgemm_fused", power_iters=1)))
+
+    errs = {}
+    for passes in (2, 3, 4):
+        res = rsvd.rsvd_streamed(KEY, src, rank, passes=passes)
+        errs[passes] = float(rsvd.reconstruction_error(a, res))
+    assert abs(errs[2] - err_pi0) <= 1e-5, (name, errs, err_pi0)
+    assert abs(errs[3] - err_pi1) <= 1e-5, (name, errs, err_pi1)
+    assert abs(errs[4] - err_pi1) <= 1e-5, (name, errs, err_pi1)
+    # power iteration must never hurt (monotone to rounding at the floor)
+    assert errs[3] <= errs[2] * 1.02 + 2e-7, (name, errs)
+    assert errs[4] <= errs[3] * 1.02 + 2e-7, (name, errs)
+
+
+def test_streamed_passes_deterministic_for_fixed_tiling(matrix, disk):
+    """Fixed tiling => bit-deterministic multi-pass results (the fused
+    Omega lattice and the tile-ordered accumulations are pure functions of
+    (key, tiling))."""
+    r1 = rsvd.rsvd_streamed(KEY, stream.MemmapSource(disk["npy"], TILE),
+                            RANK, passes=3)
+    r2 = rsvd.rsvd_streamed(KEY, stream.MemmapSource(disk["npy"], TILE),
+                            RANK, passes=3)
+    for got, want in zip(r1, r2):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# Prefetch semantics
+# ---------------------------------------------------------------------------
+
+def test_prefetch_preserves_order_and_values(matrix):
+    tiles = [matrix[i:i + TILE] for i in range(0, M, TILE)]
+    got = list(stream.prefetch(iter(tiles), depth=2))
+    assert len(got) == len(tiles)
+    for g, w in zip(got, tiles):
+        np.testing.assert_array_equal(np.asarray(g), w)
+
+
+def test_prefetch_propagates_reader_exceptions(matrix):
+    def bad():
+        yield matrix[:TILE]
+        raise RuntimeError("disk on fire")
+
+    it = stream.prefetch(bad(), depth=1)
+    next(it)
+    with pytest.raises(RuntimeError, match="disk on fire"):
+        list(it)
+
+
+def _prefetch_threads():
+    return [t for t in threading.enumerate()
+            if t.name == "repro-stream-prefetch" and t.is_alive()]
+
+
+def test_prefetch_early_close_stops_reader(matrix):
+    pulled = []
+
+    def gen():
+        for i in range(1000):
+            pulled.append(i)
+            yield matrix[:1]
+
+    it = stream.prefetch(gen(), depth=1, to_device=False)
+    next(it)
+    it.close()
+    assert len(pulled) < 10  # bounded queue: the reader never ran ahead
+
+    # regression: an abandoned stream must not leak its reader thread —
+    # including one blocked on the terminal _DONE put after exhausting an
+    # un-drained source
+    it2 = stream.prefetch(iter([matrix[:1], matrix[:1]]), depth=1,
+                          to_device=False)
+    next(it2)
+    time.sleep(0.3)  # reader exhausts the source, parks on the final put
+    it2.close()
+    deadline = time.monotonic() + 10
+    while time.monotonic() < deadline and _prefetch_threads():
+        time.sleep(0.05)
+    assert not _prefetch_threads()
+
+    with pytest.raises(ValueError, match="depth"):
+        next(stream.prefetch(iter([]), depth=0))
+
+
+# ---------------------------------------------------------------------------
+# Coercion + validation
+# ---------------------------------------------------------------------------
+
+def test_as_tile_source_coercions(matrix, disk):
+    assert isinstance(stream.as_tile_source(matrix), stream.ArraySource)
+    assert isinstance(stream.as_tile_source(disk["npy"]),
+                      stream.MemmapSource)
+    assert isinstance(stream.as_tile_source(disk["dir"]),
+                      stream.DirectorySource)
+    src = stream.as_tile_source(matrix)
+    assert stream.as_tile_source(src) is src
+    # sequences of tiles are replayable (shape inferred), bare gens are not
+    tiles = [matrix[:40], matrix[40:]]
+    seq = stream.as_tile_source(tiles)
+    assert seq.replayable and seq.shape == (M, N)
+    gen = stream.as_tile_source((t for t in tiles), shape=(M, N))
+    assert not gen.replayable
+    with pytest.raises(ValueError, match="shape"):
+        stream.as_tile_source(lambda: iter(tiles))
+    with pytest.raises(TypeError, match="TileSource"):
+        stream.as_tile_source(42)
+
+
+def test_reiterable_container_stays_replayable(matrix):
+    """Back-compat regression: an object whose __iter__ returns a fresh
+    generator per call worked with passes=2 before TileSource existed and
+    must keep working (coerced to a replayable source — no hidden
+    shape-inference pass, so shape/n_rows+n_cols stay required)."""
+    class Tiles:
+        def __iter__(self):
+            return (matrix[i:i + TILE] for i in range(0, M, TILE))
+
+    src = stream.as_tile_source(Tiles(), shape=(M, N))
+    assert src.replayable and src.shape == (M, N)
+    res = rsvd.rsvd_streamed(KEY, Tiles(), RANK, n_rows=M, n_cols=N)
+    ref = rsvd.rsvd_streamed(KEY, stream.ArraySource(matrix, TILE), RANK)
+    for got, want in zip(res, ref):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # without the shape the public API points at its own kwargs
+    with pytest.raises(ValueError, match="BOTH n_rows= and n_cols="):
+        rsvd.rsvd_streamed(KEY, Tiles(), RANK, n_cols=N)
+
+
+def test_write_matrix_shards_clears_stale_shards(tmp_path, matrix):
+    """Regression: rewriting a shorter matrix over a longer shard dir must
+    not leave stale trailing shards for DirectorySource to concatenate."""
+    pipeline.write_matrix_shards(tmp_path, matrix, 16)       # 6 shards
+    pipeline.write_matrix_shards(tmp_path, matrix[:48], 16)  # 3 shards
+    src = stream.DirectorySource(tmp_path, TILE)
+    assert src.shape == (48, N)
+    np.testing.assert_array_equal(
+        np.concatenate(list(src.tiles())), matrix[:48])
+
+
+def test_source_validation(tmp_path, matrix):
+    with pytest.raises(ValueError, match="ndim >= 2"):
+        stream.ArraySource(matrix[:, 0])
+    with pytest.raises(ValueError, match="tile_rows"):
+        stream.ArraySource(matrix, 0)
+    with pytest.raises(ValueError, match="no \\*.npy"):
+        stream.DirectorySource(tmp_path)
+    pipeline.write_matrix_shards(tmp_path, matrix, 48)
+    np.save(tmp_path / "zz_bad.npy", np.zeros((4, N + 1), np.float32))
+    with pytest.raises(ValueError, match="trailing shape"):
+        stream.DirectorySource(tmp_path)
+
+
+def test_rsvd_streamed_shape_crosschecks(matrix):
+    with pytest.raises(ValueError, match="n_rows"):
+        rsvd.rsvd_streamed(KEY, stream.ArraySource(matrix, TILE), RANK,
+                           n_rows=M + 1, n_cols=N)
+    with pytest.raises(ValueError, match="n_cols"):
+        rsvd.rsvd_streamed(KEY, stream.ArraySource(matrix, TILE), RANK,
+                           n_rows=M, n_cols=N + 1)
+    with pytest.raises(ValueError, match="passes"):
+        rsvd.rsvd_streamed(KEY, stream.ArraySource(matrix, TILE), RANK,
+                           passes=0)
+    # a generator-factory source that lies about its row count fails loudly
+    short = stream.GeneratorSource(lambda: iter([matrix[:TILE]]),
+                                   (M, N))
+    with pytest.raises(ValueError, match="cover"):
+        rsvd.rsvd_streamed(KEY, short, RANK)
+
+
+# ---------------------------------------------------------------------------
+# Streaming Tucker from disk
+# ---------------------------------------------------------------------------
+
+def test_sthosvd_streamed_from_memmap_tensor(tmp_path):
+    """rp_sthosvd_streamed accepts a memmapped tensor source (dims inferred)
+    and matches the in-memory slab path bit for bit."""
+    dims, ranks = (40, 30, 20), (8, 8, 8)
+    t = hosvd.make_test_tensor(jax.random.PRNGKey(12), dims, ranks)
+    npy = pipeline.write_matrix_npy(tmp_path / "t.npy", np.asarray(t))
+    res_mm = hosvd.rp_sthosvd_streamed(
+        KEY, stream.MemmapSource(npy, tile_rows=10), ranks=ranks)
+    res_mem = hosvd.rp_sthosvd_streamed(
+        KEY, (t[i:i + 10] for i in range(0, 40, 10)), dims, ranks)
+    np.testing.assert_array_equal(np.asarray(res_mm.core),
+                                  np.asarray(res_mem.core))
+    for qa, qb in zip(res_mm.factors, res_mem.factors):
+        np.testing.assert_array_equal(np.asarray(qa), np.asarray(qb))
+    err = float(hosvd.reconstruction_error(t, res_mm))
+    assert err < 1e-2, err
