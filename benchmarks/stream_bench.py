@@ -215,11 +215,79 @@ def memmap_source_rows(shapes=((4096, 512, 64, 256),), records=None) -> list:
     return rows
 
 
+def kv_serving_rows(records=None, *, slots=3, max_seq=128, rank=4,
+                    ratio=2.0, requests=3, max_new=24) -> list:
+    """Compressed-attention serving row (DESIGN.md §12): the engine on the
+    examples/serve_llm.py smoke config with ``kv_compress_ratio`` set —
+    tokens/sec plus the per-slot HBM story (dense-equivalent bytes vs
+    factored prefix + dense tail) straight from ``kv_slot_bytes``."""
+    from repro.configs.base import smoke_config
+    from repro.models import registry as R
+    from repro.models import transformer as T
+    from repro.serve.engine import Engine, Request
+
+    cfg = smoke_config(R.get_arch("qwen3-0.6b"))
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, slots=slots, max_seq=max_seq,
+                 kv_sketch_rank=rank, kv_compress_ratio=ratio)
+    reqs = [Request(rid=i, prompt=[1 + i, 2, 3], max_new=max_new)
+            for i in range(requests)]
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.perf_counter()
+    while eng.queue or any(eng.active):
+        eng.step()
+    dt = time.perf_counter() - t0
+    total_tokens = sum(len(r.out) for r in reqs)
+    rep = eng.kv_bytes_report()
+    comp = [r for r in rep["slots"] if r["comp_len"] > 0]
+    assert comp, "no slot ever compressed — threshold never crossed"
+    for r in comp:
+        assert r["compressed_bytes"] < r["dense_bytes"], r
+    rec = {
+        "kind": "kv_serving", "arch": cfg.name, "slots": slots,
+        "max_seq": max_seq, "rank": rank, "compress_ratio": ratio,
+        "requests": requests, "tokens": total_tokens,
+        "tokens_per_sec": round(total_tokens / dt, 2),
+        "compressed_slots": len(comp),
+        "dense_bytes_per_slot": comp[0]["dense_bytes"],
+        "compressed_bytes_per_slot": comp[0]["compressed_bytes"],
+        "hbm_ratio": round(comp[0]["compressed_bytes"]
+                           / comp[0]["dense_bytes"], 4),
+        "dense_bytes_total": rep["dense_bytes"],
+        "compressed_bytes_total": rep["compressed_bytes"],
+    }
+    if records is not None:
+        records.append(rec)
+    return [row(
+        f"stream.kv_serving.{cfg.name}.s{slots}.r{rank}", dt * 1e6,
+        f"tok_per_sec={rec['tokens_per_sec']};"
+        f"hbm_dense={rec['dense_bytes_per_slot']};"
+        f"hbm_factored={rec['compressed_bytes_per_slot']};"
+        f"hbm_ratio={rec['hbm_ratio']}x")]
+
+
+def _merge_bench_json(records, kinds) -> None:
+    """Replace records of ``kinds`` in BENCH_stream.json, keep the rest —
+    smoke steps must not clobber the full run()'s rows."""
+    old = []
+    if os.path.exists(BENCH_JSON):
+        try:
+            with open(BENCH_JSON) as f:
+                old = [r for r in json.load(f)
+                       if r.get("kind") not in kinds]
+        except (json.JSONDecodeError, OSError):
+            old = []
+    with open(BENCH_JSON, "w") as f:
+        json.dump(old + records, f, indent=1)
+
+
 def run() -> list:
     records = []
     rows = (update_throughput(records=records)
             + rsvd_streamed_bench(records=records)
-            + memmap_source_rows(records=records))
+            + memmap_source_rows(records=records)
+            + kv_serving_rows(records=records))
     with open(BENCH_JSON, "w") as f:
         json.dump(records, f, indent=1)
     rows.append(row("stream.bench_json.written", 0.0, BENCH_JSON))
@@ -297,10 +365,29 @@ def smoke_source() -> None:
               f"passes=4 {err_p:.3e})")
 
 
+def smoke_kv() -> None:
+    """CI `kv-serving` smoke: serve the examples/serve_llm.py smoke config
+    with compression enabled, assert every compressed slot's HBM bytes
+    strictly drop below the dense baseline, and merge the kv_serving row
+    into BENCH_stream.json (the acceptance artifact) without clobbering
+    the full run()'s other rows.  Seconds, not minutes."""
+    records = []
+    kv_serving_rows(records=records)
+    _merge_bench_json(records, {"kv_serving"})
+    rec = records[0]
+    print(f"kv-serving smoke OK: {rec['compressed_slots']} slots "
+          f"compressed, {rec['tokens_per_sec']} tok/s, per-slot HBM "
+          f"{rec['compressed_bytes_per_slot']} vs dense "
+          f"{rec['dense_bytes_per_slot']} ({rec['hbm_ratio']}x) -> "
+          f"{BENCH_JSON}")
+
+
 if __name__ == "__main__":
     jax.config.update("jax_platform_name", "cpu")
     if "--smoke-source" in sys.argv:
         smoke_source()
+    elif "--smoke-kv" in sys.argv:
+        smoke_kv()
     elif "--smoke" in sys.argv:
         smoke()
     else:

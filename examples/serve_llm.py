@@ -1,6 +1,11 @@
 """Batched serving demo: continuous batching over slots with KV caches.
 
     PYTHONPATH=src python examples/serve_llm.py --arch qwen3-0.6b --requests 6
+
+Compressed-attention variant (DESIGN.md §12): add ``--kv-rank 4
+--kv-compress-ratio 2`` and the engine swaps each slot's dense KV prefix for
+rank-4 factors once it holds 8+ uncompressed rows, attending through the
+factors from then on; the summary line reports the per-slot HBM savings.
 """
 
 import argparse
@@ -20,11 +25,15 @@ def main():
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--slots", type=int, default=3)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--kv-rank", type=int, default=None)
+    ap.add_argument("--kv-compress-ratio", type=float, default=None)
     args = ap.parse_args()
 
     cfg = smoke_config(R.get_arch(args.arch))
     params = T.init_params(cfg, jax.random.PRNGKey(0))
-    eng = Engine(cfg, params, slots=args.slots, max_seq=128)
+    eng = Engine(cfg, params, slots=args.slots, max_seq=128,
+                 kv_sketch_rank=args.kv_rank,
+                 kv_compress_ratio=args.kv_compress_ratio)
 
     reqs = [Request(rid=i, prompt=[1 + i, 2 + i, 3], max_new=args.max_new)
             for i in range(args.requests)]
@@ -41,6 +50,11 @@ def main():
     print(f"arch={cfg.name} slots={args.slots}: {len(reqs)} requests, "
           f"{total_tokens} tokens in {dt:.2f}s "
           f"({total_tokens/dt:.1f} tok/s, {steps} engine steps)")
+    if eng.kv_fact is not None:
+        for r in eng.kv_bytes_report()["slots"]:
+            print(f"  slot{r['slot']}: comp_len={r['comp_len']}/{r['pos']} "
+                  f"HBM {r['compressed_bytes']} B vs dense "
+                  f"{r['dense_bytes']} B ({r['ratio']:.2f}x)")
     for r in reqs:
         print(f"  req{r.rid}: prompt={r.prompt} -> out={r.out}")
 

@@ -2,7 +2,12 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
         --requests 8 --slots 4 --max-new 16
-"""
+
+Compressed-attention serving (DESIGN.md §12): ``--kv-rank r`` maintains the
+incremental per-slot KV sketches; adding ``--kv-compress-ratio x`` makes the
+engine act on them — slots swap their dense prefix for rank-r factors every
+``x * r`` rows and decode attends through the factors.  The final log line
+reports the per-slot HBM story."""
 
 from __future__ import annotations
 
@@ -30,6 +35,13 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kv-rank", type=int, default=None,
+                    help="maintain incremental per-slot KV sketches at this "
+                         "rank (serve/kv_compress.py)")
+    ap.add_argument("--kv-compress-ratio", type=float, default=None,
+                    help="act on the sketches: swap a slot's dense prefix "
+                         "for rank-r factors every ratio*rank rows "
+                         "(requires --kv-rank)")
     args = ap.parse_args()
 
     logging.basicConfig(level=logging.INFO,
@@ -39,7 +51,8 @@ def main():
         cfg = smoke_config(cfg)
     params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
     eng = Engine(cfg, params, slots=args.slots, max_seq=args.max_seq,
-                 temperature=args.temperature)
+                 temperature=args.temperature, kv_sketch_rank=args.kv_rank,
+                 kv_compress_ratio=args.kv_compress_ratio)
 
     rng = jax.random.PRNGKey(args.seed + 1)
     for i in range(args.requests):
@@ -60,6 +73,15 @@ def main():
     total = args.requests * args.max_new
     log.info("served %d requests / %d tokens in %.2fs (%.1f tok/s)",
              args.requests, total, dt, total / dt)
+    if eng.kv_fact is not None:
+        rep = eng.kv_bytes_report()
+        comp = [r for r in rep["slots"] if r["comp_len"] > 0]
+        log.info("kv compression: %d/%d slots factored, per-slot HBM "
+                 "%d B vs dense %d B (%.2fx)", len(comp), eng.slots,
+                 comp[0]["compressed_bytes"] if comp else 0,
+                 comp[0]["dense_bytes"] if comp else 0,
+                 (comp[0]["compressed_bytes"] / comp[0]["dense_bytes"])
+                 if comp else 1.0)
 
 
 if __name__ == "__main__":

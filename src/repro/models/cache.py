@@ -51,17 +51,18 @@ def _layer_cache_defs(cfg: ModelCfg, spec: LayerSpec, batch: int, seq: int):
     return d
 
 
-def build_cache(cfg: ModelCfg, batch: int, seq: int,
-                make: Callable = None) -> dict:
-    """make(shape, dtype) -> leaf; defaults to zeros (concrete).  Pass
-    ``jax.ShapeDtypeStruct`` to get the abstract cache for the dry-run."""
+def _build_layer_trees(cfg: ModelCfg, defs_fn: Callable,
+                       make: Callable = None) -> dict:
+    """Shared pre/scan/rem scaffolding: ``defs_fn(spec) -> {name: (shape,
+    dtype)}`` per layer; scan-group leaves get the leading n_scan_periods
+    dim.  build_cache and build_kv_factors both use this, so their pytrees
+    can never drift structurally."""
     if make is None:
         make = lambda s, dt: jnp.zeros(s, dt)  # noqa: E731
 
     def layer_tree(spec, lead=None):
-        defs = _layer_cache_defs(cfg, spec, batch, seq)
         out = {}
-        for k, (shape, dt) in defs.items():
+        for k, (shape, dt) in defs_fn(spec).items():
             if lead is not None:
                 shape = (lead,) + shape
             out[k] = make(shape, dt)
@@ -75,8 +76,45 @@ def build_cache(cfg: ModelCfg, batch: int, seq: int,
     return {"pre": pre, "scan": scan, "rem": rem}
 
 
+def build_cache(cfg: ModelCfg, batch: int, seq: int,
+                make: Callable = None) -> dict:
+    """make(shape, dtype) -> leaf; defaults to zeros (concrete).  Pass
+    ``jax.ShapeDtypeStruct`` to get the abstract cache for the dry-run."""
+    return _build_layer_trees(
+        cfg, lambda spec: _layer_cache_defs(cfg, spec, batch, seq), make)
+
+
 def abstract_cache(cfg: ModelCfg, batch: int, seq: int) -> dict:
     return build_cache(cfg, batch, seq, make=jax.ShapeDtypeStruct)
+
+
+def _factor_defs(cfg: ModelCfg, spec: LayerSpec, batch: int, seq: int,
+                 rank: int) -> dict:
+    """Factored-KV leaf defs for one layer — only full-context attention
+    layers are swappable (DESIGN.md §12): sliding-window caches are already
+    O(window) and their ring overwrites break the zeroed-prefix contract;
+    MLA latents attend through the up-projections, not ``factored_scores``.
+    Factors stay f32 (the factorization's accuracy floor); ``us`` rows at or
+    beyond a slot's ``comp_len`` are zero by construction."""
+    if spec.mixer != "attn" or (spec.window is not None and spec.window < seq):
+        return {}
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k_us": ((batch, kv, seq, rank), jnp.float32),
+        "k_vt": ((batch, kv, rank, hd), jnp.float32),
+        "v_us": ((batch, kv, seq, rank), jnp.float32),
+        "v_vt": ((batch, kv, rank, hd), jnp.float32),
+    }
+
+
+def build_kv_factors(cfg: ModelCfg, batch: int, seq: int, rank: int,
+                     make: Callable = None) -> dict:
+    """Factored-KV pytree mirroring ``build_cache`` structure: per eligible
+    layer a dict {k_us, k_vt, v_us, v_vt} (zeros until the engine swaps a
+    slot in), ineligible layers an empty dict.  Scan-group leaves carry the
+    leading n_scan_periods dim, exactly like the cache."""
+    return _build_layer_trees(
+        cfg, lambda spec: _factor_defs(cfg, spec, batch, seq, rank), make)
 
 
 def grow_cache(cache: dict, extra: int) -> dict:

@@ -164,6 +164,50 @@ def attention(q, k, v, *, causal: bool, window: Optional[int], scale: float,
     return jnp.swapaxes(out, 1, 2).astype(q.dtype)
 
 
+def factored_decode_attention(q, k, v, k_us, k_vt, v_us, v_vt, comp_len, *,
+                              write_pos, scale, cap: float = 0.0):
+    """Single-token decode attention over a factored prefix + dense tail.
+
+    A serving slot whose KV history has been compressed (DESIGN.md §12)
+    holds rows [0, comp_len) only as rank-r factors K ~ us_k·vt_k,
+    V ~ us_v·vt_v; the dense cache rows for that prefix are zeroed.  Scores
+    for the prefix never materialize K: q·K^T = (q·vt_k^T)·us_k^T, two skinny
+    GEMMs; the value contraction runs the same trick in reverse.  Tail rows
+    (comp_len <= i <= write_pos) use the dense cache as usual, and one
+    softmax spans both regions.
+
+    q: (B, 1, H, hd); k/v: (B, S, KV, hd); *_us: (B, KV, S, r) with rows
+    >= comp_len[b] zero; *_vt: (B, KV, r, hd); comp_len: (B,) int32;
+    write_pos: scalar.  Returns (B, 1, H, hd) in q.dtype.  All math f32
+    (matching the f32 score/accumulator path of ``attention``).
+    """
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    groups = h // kvh
+    qf = q.astype(jnp.float32).reshape(b, kvh, groups, hd)
+    kf = jnp.moveaxis(k.astype(jnp.float32), 1, 2)         # (B, KV, S, hd)
+    vf = jnp.moveaxis(v.astype(jnp.float32), 1, 2)
+
+    s_dense = jnp.einsum("bkgd,bksd->bkgs", qf, kf) * scale
+    qv = jnp.einsum("bkgd,bkrd->bkgr", qf, k_vt.astype(jnp.float32))
+    s_fact = jnp.einsum("bkgr,bksr->bkgs", qv,
+                        k_us.astype(jnp.float32)) * scale
+    idx = jnp.arange(skv, dtype=jnp.int32)
+    prefix = idx[None, :] < comp_len[:, None]              # (B, S)
+    valid = jnp.broadcast_to(idx[None, :] <= write_pos, prefix.shape)
+    scores = jnp.where(prefix[:, None, None], s_fact, s_dense)
+    scores = softcap(scores, cap)
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)                # (B, KV, G, S)
+
+    w_pre = probs * prefix[:, None, None]
+    w_tail = probs * (valid & ~prefix)[:, None, None]
+    out = jnp.einsum("bkgs,bksr->bkgr", w_pre, v_us.astype(jnp.float32))
+    out = jnp.einsum("bkgr,bkrd->bkgd", out, v_vt.astype(jnp.float32))
+    out = out + jnp.einsum("bkgs,bksd->bkgd", w_tail, vf)
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # Attention block (projections + cache plumbing)
 # ---------------------------------------------------------------------------

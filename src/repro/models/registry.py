@@ -152,12 +152,18 @@ def make_prefill_step(cfg: ModelCfg) -> Callable:
 
 
 def make_serve_step(cfg: ModelCfg) -> Callable:
-    """(params, batch{tokens,cache,write_pos}) -> (logits, new_cache)."""
+    """(params, batch{tokens,cache,write_pos}) -> (logits, new_cache).
+
+    Optional batch keys ``kv_factors``/``comp_len`` carry the serving
+    engine's compressed-prefix state (serve/kv_compress.py, DESIGN.md §12);
+    they ride through read-only — the returned cache never contains them."""
 
     def step(params, batch):
         p = T.cast_params_for_compute(cfg, params)
         out = T.forward(cfg, p, batch["tokens"], cache=batch["cache"],
-                        write_pos=batch["write_pos"])
+                        write_pos=batch["write_pos"],
+                        kv_factors=batch.get("kv_factors"),
+                        comp_len=batch.get("comp_len"))
         return _final_logits(cfg, out.logits[:, -1]), out.cache
 
     return step

@@ -241,9 +241,11 @@ def _act_dtype(cfg):
 
 def apply_layer(cfg: ModelCfg, spec: LayerSpec, p: dict, x: jax.Array, *,
                 positions, cache, write_pos, enc_out, return_cache: bool,
-                causal: bool = True):
+                causal: bool = True, factors=None, comp_len=None):
     """Residual block: norm -> mixer -> (+) [norm -> ffn -> (+)].
-    Returns (x, new_cache_dict_or_None)."""
+    Returns (x, new_cache_dict_or_None).  ``factors``/``comp_len`` carry the
+    serving engine's compressed-prefix state (DESIGN.md §12) — None/empty
+    for every non-serving path."""
     x = constrain(x, "batch", None, None)   # re-anchor the residual stream
     h = L.apply_norm(cfg, p, "norm1", x)
     new_cache: dict[str, Any] = {}
@@ -254,7 +256,8 @@ def apply_layer(cfg: ModelCfg, spec: LayerSpec, p: dict, x: jax.Array, *,
             c = L.KVCache(cache["k"], cache["v"])
         mix, kv = _attn_with_cache(cfg, spec, p, h, positions=positions,
                                    cache=c, write_pos=write_pos,
-                                   return_cache=return_cache, causal=causal)
+                                   return_cache=return_cache, causal=causal,
+                                   factors=factors, comp_len=comp_len)
         if kv is not None:
             new_cache.update({"k": kv.k, "v": kv.v})
     elif spec.mixer == "mla":
@@ -322,7 +325,7 @@ def apply_layer(cfg: ModelCfg, spec: LayerSpec, p: dict, x: jax.Array, *,
 
 
 def _attn_with_cache(cfg, spec, p, h, *, positions, cache, write_pos,
-                     return_cache, causal):
+                     return_cache, causal, factors=None, comp_len=None):
     """attn_block + prefill cache construction + non-causal (encoder) path."""
     dt = h.dtype
     scale = cfg.query_scale or (1.0 / math.sqrt(cfg.head_dim))
@@ -371,11 +374,23 @@ def _attn_with_cache(cfg, spec, p, h, *, positions, cache, write_pos,
                 cache.k, k.astype(cache.k.dtype), wp, axis=1),
             jax.lax.dynamic_update_slice_in_dim(
                 cache.v, v.astype(cache.v.dtype), wp, axis=1))
-        out = L.attention(q, kv.k.astype(dt), kv.v.astype(dt), causal=causal,
-                          window=spec.window, scale=scale,
-                          cap=cfg.attn_softcap,
-                          q_positions=positions.reshape(-1),
-                          kv_positions=kv_pos, chunk=cfg.attn_chunk)
+        if factors and comp_len is not None and q.shape[1] == 1:
+            # compressed-prefix decode (DESIGN.md §12): rows [0, comp_len_b)
+            # of this cache live only as rank-r factors; the dense rows
+            # there are zeroed, so attention must score the prefix through
+            # the factors and the tail through the cache, in one softmax.
+            # Only full-context layers carry factors (cache.build_kv_factors
+            # eligibility), so the window mask never binds here.
+            out = L.factored_decode_attention(
+                q, kv.k, kv.v, factors["k_us"], factors["k_vt"],
+                factors["v_us"], factors["v_vt"], comp_len,
+                write_pos=write_pos, scale=scale, cap=cfg.attn_softcap)
+        else:
+            out = L.attention(q, kv.k.astype(dt), kv.v.astype(dt),
+                              causal=causal, window=spec.window, scale=scale,
+                              cap=cfg.attn_softcap,
+                              q_positions=positions.reshape(-1),
+                              kv_positions=kv_pos, chunk=cfg.attn_chunk)
 
     b, sq = out.shape[:2]
     out = out.reshape(b, sq, -1)
@@ -390,7 +405,8 @@ def _attn_with_cache(cfg, spec, p, h, *, positions, cache, write_pos,
 def apply_stack(cfg: ModelCfg, params: dict, x: jax.Array, *, positions,
                 cache, write_pos, enc_out, return_cache: bool,
                 causal: bool = True, pattern=None, prefix="layers",
-                n_periods=None, n_rem=None, use_prelude: bool = True):
+                n_periods=None, n_rem=None, use_prelude: bool = True,
+                kv_factors=None, comp_len=None):
     """Scanned pattern group + remainder layers."""
     pattern = pattern or cfg.pattern
     n_periods = cfg.n_scan_periods if n_periods is None else n_periods
@@ -400,26 +416,32 @@ def apply_stack(cfg: ModelCfg, params: dict, x: jax.Array, *, positions,
     scan_p = sub(params, f"{prefix}/")
     has_cache = cache is not None
     scan_c = cache["scan"] if has_cache else None
+    has_f = kv_factors is not None
+    scan_f = kv_factors["scan"] if has_f else None
 
     # prelude layers (unrolled, before the scan group)
     new_pre = []
     prelude = cfg.prelude if use_prelude else ()
     for j, spec in enumerate(prelude):
         cj = cache["pre"][j] if has_cache else None
+        fj = kv_factors["pre"][j] if has_f else None
         x, nc = apply_layer(cfg, spec, sub(params, f"pre{j}/"), x,
                             positions=positions, cache=cj,
                             write_pos=write_pos, enc_out=enc_out,
-                            return_cache=return_cache, causal=causal)
+                            return_cache=return_cache, causal=causal,
+                            factors=fj, comp_len=comp_len)
         new_pre.append(nc if nc is not None else {})
 
-    def period_body(x, p_i, c_i):
+    def period_body(x, p_i, c_i, f_i=None):
         new_cs = []
         for i, spec in enumerate(pattern):
             ci = c_i[i] if c_i is not None else None
+            fi = f_i[i] if f_i is not None else None
             x, nc = apply_layer(cfg, spec, sub(p_i, f"p{i}/"), x,
                                 positions=positions, cache=ci,
                                 write_pos=write_pos, enc_out=enc_out,
-                                return_cache=return_cache, causal=causal)
+                                return_cache=return_cache, causal=causal,
+                                factors=fi, comp_len=comp_len)
             new_cs.append(nc if nc is not None else {})
         return x, tuple(new_cs)
 
@@ -437,16 +459,17 @@ def apply_stack(cfg: ModelCfg, params: dict, x: jax.Array, *, positions,
         new_cs = []
         for i in range(n_periods):
             x, nc = period_body(x, idx(scan_p, i),
-                                idx(scan_c, i) if has_cache else None)
+                                idx(scan_c, i) if has_cache else None,
+                                idx(scan_f, i) if has_f else None)
             new_cs.append(nc)
         if has_cache or return_cache:
             new_scan = jax.tree.map(lambda *xs: jnp.stack(xs), *new_cs)
     elif n_periods:
         if has_cache:
             def body(x, xs):
-                p_i, c_i = xs
-                return period_body(x, p_i, c_i)
-            x, new_scan = jax.lax.scan(body, x, (scan_p, scan_c))
+                p_i, c_i, f_i = xs
+                return period_body(x, p_i, c_i, f_i)
+            x, new_scan = jax.lax.scan(body, x, (scan_p, scan_c, scan_f))
         elif return_cache:  # prefill: collect stacked output caches
             def body2(x, p_i):
                 return period_body(x, p_i, None)
@@ -461,10 +484,12 @@ def apply_stack(cfg: ModelCfg, params: dict, x: jax.Array, *, positions,
     for j in range(n_rem):
         spec = pattern[j % period]
         cj = cache["rem"][j] if has_cache else None
+        fj = kv_factors["rem"][j] if has_f else None
         x, nc = apply_layer(cfg, spec, sub(params, f"rem{j}/"), x,
                             positions=positions, cache=cj,
                             write_pos=write_pos, enc_out=enc_out,
-                            return_cache=return_cache, causal=causal)
+                            return_cache=return_cache, causal=causal,
+                            factors=fj, comp_len=comp_len)
         new_rem.append(nc if nc is not None else {})
 
     new_cache = None
@@ -549,8 +574,16 @@ def forward(cfg: ModelCfg, params: dict, tokens: jax.Array, *,
             cache: Optional[dict] = None, write_pos=0,
             img_embeds: Optional[jax.Array] = None,
             enc_embeds: Optional[jax.Array] = None,
-            return_cache: bool = False) -> ForwardOut:
-    """tokens: (B, S).  Decode: S == 1 with a populated cache."""
+            return_cache: bool = False,
+            kv_factors: Optional[dict] = None,
+            comp_len: Optional[jax.Array] = None) -> ForwardOut:
+    """tokens: (B, S).  Decode: S == 1 with a populated cache.
+
+    ``kv_factors``/``comp_len`` (serving only, DESIGN.md §12): a
+    ``cache.build_kv_factors`` pytree of per-layer rank-r KV factors plus the
+    per-batch-row compressed-prefix length; decode attention for eligible
+    layers scores rows [0, comp_len_b) through the factors (the dense cache
+    rows there are zeroed by the engine) and the tail through the cache."""
     dt = _act_dtype(cfg)
     x = embed_tokens(cfg, params, tokens)
 
@@ -573,7 +606,8 @@ def forward(cfg: ModelCfg, params: dict, tokens: jax.Array, *,
 
     x, new_cache = apply_stack(cfg, params, x, positions=positions,
                                cache=cache, write_pos=write_pos,
-                               enc_out=enc_out, return_cache=return_cache)
+                               enc_out=enc_out, return_cache=return_cache,
+                               kv_factors=kv_factors, comp_len=comp_len)
 
     x = L.apply_norm(cfg, params, "final_norm", x)
     if cfg.tie_embeddings:

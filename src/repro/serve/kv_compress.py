@@ -14,7 +14,11 @@ each appended token (``kv_sketch_append``), so the O(S·d·p) sketch GEMM is
 never recomputed from scratch, and ``kv_sketch_factor`` finalizes factors
 on demand.  Because sketch updates are bit-identical to one-shot sketching
 (DESIGN.md §10), incremental append + finalize equals full recompute
-exactly.  serve/engine.py plumbs this per slot.
+exactly.  serve/engine.py plumbs this per slot — and, with
+``kv_compress_ratio`` set, ACTS on it: dense prefixes are swapped for the
+factors and decode attends through them (DESIGN.md §12).  Sliding-window
+layers get the rolling variants (``kv_rolling_*``) backed by
+``stream/rolling.py``'s per-row sketch ring.
 """
 
 from __future__ import annotations
@@ -79,9 +83,49 @@ def kv_sketch_append(states: stream.SketchState, rows: jax.Array,
                      pos) -> stream.SketchState:
     """Absorb newly appended tokens: ``rows`` (n_heads, T, head_dim) written
     at sequence position ``pos`` (int or traced).  Incremental cost is
-    O(T · head_dim · p) instead of re-sketching the whole history."""
+    O(T · head_dim · p) instead of re-sketching the whole history.
+
+    Offset origin: ``pos`` is the ABSOLUTE position in the slot's logical
+    token history — row 0 of the sequence, not row 0 of whatever dense span
+    currently survives in the cache.  After a compression swap
+    (engine.compress_slot) the dense tail keeps its absolute cache offsets,
+    so post-swap appends pass the same origin: position ``comp_len + i`` for
+    the i-th tail token, never ``i``.  Because row ``pos`` of the sketch is
+    a pure function of (that row's data, key), tail appends at absolute
+    offsets stay bit-identical to a full-history recompute over the same
+    rows (DESIGN.md §10, §12).
+    """
+    rows = jnp.asarray(rows)
+    if rows.ndim != 3:
+        raise ValueError(f"kv_sketch_append takes (n_heads, T, head_dim) "
+                         f"rows, got shape {rows.shape}")
+    cpos = stream.state._concrete_int(pos)
+    if cpos is not None and cpos + rows.shape[1] > states.y.shape[-2]:
+        raise ValueError(
+            f"append at absolute position {cpos} (+{rows.shape[1]} rows) "
+            f"overruns max_seq={states.y.shape[-2]} — pos is the absolute "
+            f"history offset (sequence origin), not a dense-tail-relative "
+            f"one; a post-swap tail row i lives at comp_len + i")
     return jax.vmap(lambda s, r: stream.update(s, r, pos),
                     in_axes=(0, 0))(states, rows.astype(jnp.float32))
+
+
+def _factor_one(s: stream.SketchState, m: jax.Array, rank: int) -> FactoredKV:
+    """Rank-``rank`` factors of one head's history ``m`` (S, d) against its
+    accumulated sketch — the shared core of the linear and rolling paths."""
+    q = stream.range_basis(s)                    # (max_seq, p)
+    # Mask unseen rows: with fewer streamed rows than the sketch width,
+    # QR of the rank-deficient Y emits junk trailing columns supported
+    # on unseen rows — without the mask those would dot stale cache
+    # content into b.
+    seen = (jnp.arange(m.shape[0]) < s.rows_seen)[:, None]
+    m = jnp.where(seen, m, 0.0)
+    b = jnp.dot(q.T, m, precision=jax.lax.Precision.HIGHEST,
+                preferred_element_type=jnp.float32)   # (p, head_dim)
+    u_b, sv, vt = jnp.linalg.svd(b, full_matrices=False)
+    us = jnp.dot(q, u_b[:, :rank],
+                 preferred_element_type=jnp.float32) * sv[None, :rank]
+    return FactoredKV(us, vt[:rank, :])
 
 
 def kv_sketch_factor(states: stream.SketchState, hist: jax.Array,
@@ -93,21 +137,71 @@ def kv_sketch_factor(states: stream.SketchState, hist: jax.Array,
     cache).  Cache rows the sketch never saw (recycled-slot leftovers,
     preallocated tails) are masked out of the projection, so the factors
     depend only on the streamed rows.  Returns head-batched FactoredKV.
+
+    Post-swap note (DESIGN.md §12): once a slot's dense prefix has been
+    swapped for factors, the caller passes ``hist`` = reconstructed prefix +
+    live dense tail (engine._kv_hist) — the sketch Y still describes the
+    TRUE rows, so the only approximation introduced by re-compression is the
+    (already accepted) rank-r error of the previous swap.
     """
+    return jax.vmap(lambda s, m: _factor_one(s, m, rank))(
+        states, hist.astype(jnp.float32))
+
+
+# -- sliding-window (rolling) per-head sketches -----------------------------
+
+def kv_rolling_init(key, n_heads: int, head_dim: int, window: int,
+                    rank: int, *, method: str = "shgemm",
+                    decay: float = 1.0) -> stream.RollingSketchState:
+    """Per-head ROLLING sketch states for one (slot, layer) sliding-window
+    KV history (ring-buffer cache leaves, models/cache.py).  Ring capacity
+    equals the cache window, so sketch eviction tracks cache overwrite
+    exactly; finalizing matches a fresh sketch of the current window bit for
+    bit (stream/rolling.py)."""
+    p = _sketch_width(rank, head_dim)
+    keys = jax.random.split(key, n_heads)
+    return jax.vmap(
+        lambda k: stream.rolling_init(k, head_dim, p, window=window,
+                                      method=method, decay=decay))(keys)
+
+
+def kv_rolling_append(states: stream.RollingSketchState, rows: jax.Array,
+                      pos) -> stream.RollingSketchState:
+    """Absorb window-layer tokens: ``rows`` (n_heads, T, head_dim) at
+    ABSOLUTE history position ``pos`` (same origin as kv_sketch_append —
+    the ring slot is ``pos % window``, mirroring the cache's own ring).
+
+    The monotone-append guard is hoisted HERE: inside the per-head vmap
+    ``rows_seen`` is a tracer, so rolling_update's own concrete check can
+    never fire — this is the batched entry point that still sees concrete
+    state between engine steps (heads share one clock, so checking the max
+    suffices)."""
+    rows = jnp.asarray(rows)
+    if rows.ndim != 3:
+        raise ValueError(f"kv_rolling_append takes (n_heads, T, head_dim) "
+                         f"rows, got shape {rows.shape}")
+    cpos = stream.state._concrete_int(pos)
+    cseen = stream.state._concrete_int(states.rows_seen.max())
+    if cpos is not None and cseen is not None and cpos < cseen:
+        raise ValueError(
+            f"append at absolute position {cpos} is behind the rolling "
+            f"sketch's high-water mark {cseen} — rewriting ring history "
+            f"would corrupt the eviction order (rolling appends must be "
+            f"monotone)")
+    return jax.vmap(lambda s, r: stream.rolling_update(s, r, pos),
+                    in_axes=(0, 0))(states, rows.astype(jnp.float32))
+
+
+def kv_rolling_factor(states: stream.RollingSketchState, hist: jax.Array,
+                      rank: int):
+    """Finalize per-head factors of the CURRENT WINDOW.
+
+    ``hist`` (n_heads, window, head_dim) must be window-ordered (oldest
+    live row first — engine._kv_ring_hist rotates the cache ring).  The
+    finalized rolling sketch is exactly the fresh sketch of that window, so
+    this is ``kv_sketch_factor`` on the window matrix."""
     def one(s, m):
-        q = stream.range_basis(s)                    # (max_seq, p)
-        # Mask unseen rows: with fewer streamed rows than the sketch width,
-        # QR of the rank-deficient Y emits junk trailing columns supported
-        # on unseen rows — without the mask those would dot stale cache
-        # content into b.
-        seen = (jnp.arange(m.shape[0]) < s.rows_seen)[:, None]
-        m = jnp.where(seen, m, 0.0)
-        b = jnp.dot(q.T, m, precision=jax.lax.Precision.HIGHEST,
-                    preferred_element_type=jnp.float32)   # (p, head_dim)
-        u_b, sv, vt = jnp.linalg.svd(b, full_matrices=False)
-        us = jnp.dot(q, u_b[:, :rank],
-                     preferred_element_type=jnp.float32) * sv[None, :rank]
-        return FactoredKV(us, vt[:rank, :])
+        return _factor_one(stream.rolling_finalize(s), m, rank)
     return jax.vmap(one)(states, hist.astype(jnp.float32))
 
 

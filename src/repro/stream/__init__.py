@@ -2,7 +2,9 @@
 zero-HBM fused kernel (DESIGN.md §10, §11).
 
 State + update/merge algebra:  state.py  (SketchState, init, update,
-update_cols, merge, merge_across_hosts).  Matrix finalizers: finalize.py
+update_cols, merge, merge_across_hosts).  Sliding windows: rolling.py
+(RollingSketchState — per-row sketch ring with update_evict semantics for
+overwritten rows, DESIGN.md §12).  Matrix finalizers: finalize.py
 (svd, range_basis).  Streaming Tucker: tucker.py (TuckerSketch,
 tucker_init/update/merge and the ``tucker`` finalizer).  Tile IO:
 source.py (TileSource — array / memmap / directory / generator — with
@@ -20,6 +22,8 @@ core/hosvd.py ``rp_sthosvd_streamed``.
 from repro.stream.state import (SketchState, init, merge, merge_across_hosts,
                                 update, update_cols)
 from repro.stream.finalize import range_basis, svd
+from repro.stream.rolling import (RollingSketchState, rolling_finalize,
+                                  rolling_init, rolling_update)
 from repro.stream.source import (ArraySource, DirectorySource,
                                  GeneratorSource, MemmapSource, TileSource,
                                  as_tile_source, prefetch, source_tiles)
@@ -33,6 +37,8 @@ range = range_basis  # noqa: A001
 __all__ = [
     "SketchState", "init", "update", "update_cols", "merge",
     "merge_across_hosts",
+    "RollingSketchState", "rolling_init", "rolling_update",
+    "rolling_finalize",
     "svd", "range", "range_basis",
     "TileSource", "ArraySource", "MemmapSource", "DirectorySource",
     "GeneratorSource", "as_tile_source", "prefetch", "source_tiles",

@@ -1,0 +1,197 @@
+"""Rolling (sliding-window) sketch: a SketchState variant for overwritten rows.
+
+Append-only streams fit the linear ``SketchState`` because every row of the
+right sketch Y = A·Omega depends on exactly one row of A: Omega is a pure
+function of (key, column index), so row i of Y is ``A[i] · Omega`` whatever
+the tile boundaries.  Sliding-window consumers (ring-buffer KV caches in
+``models/cache.py``, recurrent layers with bounded context) break the
+append-only contract — old rows are *overwritten*, and a linear sketch would
+keep their contribution forever.
+
+The same per-row structure is the fix: keep a **ring of per-row sketches**.
+Writing the row at absolute position ``a`` lands its sketch in ring slot
+``a % capacity`` (``update_evict`` semantics — the arriving row evicts the
+one that just left the window, no subtraction and no stored history needed).
+Finalizing rotates the ring into window order and masks slots the window has
+not reached yet, producing a plain ``SketchState`` over the current window:
+
+    rolling_finalize(state)  ==  init(key, ...); update(window_rows, 0)
+
+**bit for bit** (``decay == 1``) — the property the tests pin — because each
+Y row is a pure function of (its row data, key).  Everything downstream
+(``stream.range_basis``, ``serve.kv_compress`` factorization) consumes the
+finalized state unchanged.
+
+Decay semantics (DESIGN.md §12): with ``decay = g < 1`` the finalized sketch
+is the fresh sketch of ``diag(g^(age)) · window`` — row weights fall off
+exponentially with age (the newest row has weight 1).  The weighting is
+applied at *finalize* time only, so the ring always stores unweighted per-row
+sketches and a later finalize never compounds stale weights.
+
+Left sketches (W = Psi·A) are NOT supported: Psi's columns are indexed by row
+position, so evicting a row would need ``W -= Psi[:, a]·A[a]`` — the evicted
+row data, which a sketch-only state no longer has.  Single-pass ``stream.svd``
+therefore cannot run on a rolling state; window consumers factor against the
+live ring-buffer cache instead (serve/kv_compress.kv_rolling_factor).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import projection as proj
+from repro.stream.state import (SketchState, _concrete_int, _raw_key,
+                                _sketch_rows)
+
+
+@dataclasses.dataclass(frozen=True)
+class RollingSketchState:
+    """Ring of per-row sketches over the trailing ``window`` rows.
+
+    ``base`` is a plain SketchState whose ``y`` holds the ring (capacity =
+    ``base.max_rows`` slots; absolute row ``a`` lives in slot
+    ``a % capacity``) and whose ``rows_seen`` is the absolute high-water mark
+    (total rows ever streamed, NOT the live count).  ``window`` <= capacity
+    is the number of trailing rows a finalize exposes."""
+    base: SketchState
+    window: int = dataclasses.field(metadata={"static": True}, default=0)
+    decay: float = dataclasses.field(metadata={"static": True}, default=1.0)
+
+    @property
+    def capacity(self) -> int:
+        return self.base.max_rows
+
+    @property
+    def rows_seen(self) -> jax.Array:
+        return self.base.rows_seen
+
+
+jax.tree_util.register_dataclass(
+    RollingSketchState, data_fields=("base",), meta_fields=("window", "decay"))
+
+
+def rolling_init(key: jax.Array, n_cols: int, p: int, *, window: int,
+                 max_rows: int | None = None,
+                 method: proj.ProjectionMethod = "shgemm_fused",
+                 dist: proj.SketchDist = "gaussian",
+                 omega_dtype=jnp.bfloat16,
+                 decay: float = 1.0) -> RollingSketchState:
+    """Fresh rolling sketch for a width-``window`` sliding view of a stream
+    of ``n_cols``-column rows.
+
+    ``max_rows`` is the ring capacity (defaults to ``window``); it must be at
+    least ``window`` — a smaller ring would evict rows still inside the
+    window, silently corrupting the sketch, so that configuration raises
+    instead of clamping.  The Omega stream is the same one ``stream.init``
+    draws for ``key``, which is what makes ``rolling_finalize`` bit-identical
+    to a fresh window sketch.
+    """
+    capacity = int(window) if max_rows is None else int(max_rows)
+    if window <= 0:
+        raise ValueError(f"window={window} must be positive")
+    if window > capacity:
+        raise ValueError(
+            f"rolling-sketch window {window} exceeds ring capacity "
+            f"max_rows={capacity} — rows would be evicted while still "
+            f"inside the window (no silent clamping); grow max_rows or "
+            f"shrink the window")
+    if not (0.0 < decay <= 1.0):
+        raise ValueError(f"decay={decay} must be in (0, 1]")
+    if p > n_cols:
+        raise ValueError(f"sketch width p={p} exceeds n_cols={n_cols}")
+    base = SketchState(
+        y=jnp.zeros((capacity, p), jnp.float32), w=None,
+        key_omega=_raw_key(key), key_psi=None,
+        rows_seen=jnp.zeros((), jnp.int32),
+        n_cols=int(n_cols), p=int(p), l=0, method=str(method),
+        dist=str(dist), omega_dtype=jnp.dtype(omega_dtype).name)
+    return RollingSketchState(base=base, window=int(window),
+                              decay=float(decay))
+
+
+def rolling_update(state: RollingSketchState, a_block: jax.Array,
+                   pos=None) -> RollingSketchState:
+    """Absorb ``a_block`` = rows [pos, pos+b) of the stream (absolute
+    positions; ``pos`` defaults to the current high-water mark, i.e. append).
+
+    Each row's sketch overwrites ring slot ``row % capacity`` — the arriving
+    row evicts the row that left the window.  Appends must be monotone: a
+    ``pos`` behind rows already streamed raises when both values are
+    concrete (rewriting history would silently corrupt the eviction order;
+    under vmap/jit the values are tracers, so batched callers must hoist the
+    check — cf. serve/kv_compress.kv_rolling_append).  Gaps are allowed (the
+    engine's uniform slot clock can skip positions) and gap rows count as
+    ZERO: the ring slots a gap jumps over are cleared here, so a later
+    finalize can never expose the lap-old sketches that used to live there.
+    Tiles taller than the ring would wrap onto themselves and are rejected.
+    """
+    a_block = a_block.astype(jnp.float32)
+    if a_block.ndim != 2:
+        raise ValueError(f"rolling_update takes a 2-D row tile, got shape "
+                         f"{a_block.shape}")
+    b, n = a_block.shape
+    base = state.base
+    if n != base.n_cols:
+        raise ValueError(f"row tile has {n} columns, state expects "
+                         f"{base.n_cols}")
+    if b > state.capacity:
+        raise ValueError(
+            f"tile of {b} rows exceeds ring capacity {state.capacity} — "
+            f"rows would wrap onto themselves; split the tile")
+    if pos is None:
+        pos = base.rows_seen
+    cpos, cseen = _concrete_int(pos), _concrete_int(base.rows_seen)
+    if cpos is not None:
+        if cpos < 0:
+            raise ValueError(f"pos={cpos} must be >= 0")
+        if cseen is not None and cpos < cseen:
+            raise ValueError(
+                f"pos={cpos} is behind rows already streamed "
+                f"(rows_seen={cseen}) — rolling appends must be monotone")
+    off = jnp.asarray(pos, jnp.int32)
+    y = base.y
+    # zero the ring slots a gap jumps over (positions [rows_seen, pos) that
+    # were never streamed): their slots still hold lap-old sketches which a
+    # finalize inside the gap's window would otherwise expose as live rows
+    j = jnp.arange(state.capacity, dtype=jnp.int32)
+    gap_pos = base.rows_seen + j
+    gap_idx = jnp.mod(gap_pos, state.capacity)
+    keep = jnp.take(y, gap_idx, axis=0)
+    y = y.at[gap_idx].set(
+        jnp.where((gap_pos < off)[:, None], 0.0, keep))
+    y_rows = _sketch_rows(base, a_block)                       # (b, p)
+    idx = jnp.mod(off + jnp.arange(b, dtype=jnp.int32), state.capacity)
+    y = y.at[idx].set(y_rows)
+    rows_seen = jnp.maximum(base.rows_seen, off + b)
+    return dataclasses.replace(
+        state, base=dataclasses.replace(base, y=y, rows_seen=rows_seen))
+
+
+def rolling_finalize(state: RollingSketchState) -> SketchState:
+    """Rotate the ring into window order -> a plain ``SketchState`` over the
+    current window (max_rows == window, rows_seen == live row count).
+
+    Bit-identical to ``init(key, ...); update(window_rows, 0)`` for
+    ``decay == 1`` — each ring slot holds exactly the per-row sketch a fresh
+    sketch of the window would compute.  With ``decay = g < 1`` row ``j`` of
+    the result is scaled by ``g**(live-1-j)`` (newest row unweighted), i.e.
+    the fresh sketch of the age-weighted window.  Consumers needing row
+    masking (``range_basis`` rank-deficiency caveat) read ``rows_seen``.
+    """
+    base = state.base
+    total = base.rows_seen                                     # absolute
+    live = jnp.minimum(total, jnp.int32(state.window))
+    start = total - live                                       # abs pos of row 0
+    j = jnp.arange(state.window, dtype=jnp.int32)
+    idx = jnp.mod(start + j, state.capacity)
+    y = jnp.take(base.y, idx, axis=0)                          # (window, p)
+    seen = (j < live)[:, None]
+    y = jnp.where(seen, y, 0.0)
+    if state.decay != 1.0:
+        age = (live - 1 - j).astype(jnp.float32)               # newest -> 0
+        weight = jnp.where(seen[:, 0], state.decay ** age, 0.0)
+        y = y * weight[:, None]
+    return dataclasses.replace(base, y=y, rows_seen=live.astype(jnp.int32))

@@ -185,15 +185,25 @@ def _left_update(state: SketchState, a_block: jax.Array,
     return inc.T  # (l, n_cols)
 
 
+def _concrete_int(x) -> int | None:
+    """int(x) for concrete values, None under tracing — the single
+    tracer-concretization guard shared by state/rolling/kv_compress offset
+    checks (keep the exception tuple in one place)."""
+    try:
+        return int(x)
+    except (jax.errors.TracerIntegerConversionError,
+            jax.errors.ConcretizationTypeError, TypeError):
+        return None
+
+
 def _check_offset(off, extent: int, limit: int, what: str,
                   name: str) -> None:
     """Concrete-offset bounds check: ``jax.lax.dynamic_update_slice`` CLAMPS
     out-of-range offsets, which would silently overwrite earlier rows/cols
     instead of failing.  Traced offsets (scan carries) pass through — the
     caller owns bounds there (DESIGN.md §10.1)."""
-    try:
-        off = int(off)
-    except (jax.errors.TracerIntegerConversionError, TypeError):
+    off = _concrete_int(off)
+    if off is None:
         return
     if off < 0:
         raise ValueError(f"{name}={off} must be >= 0")

@@ -1,0 +1,356 @@
+"""Compressed-attention serving: the engine ACTS on its KV sketches
+(DESIGN.md §12).
+
+End-to-end decode equivalence (compression on vs off), strict per-slot HBM
+byte drop, bitwise equality of the incremental sketch path after a swap-in,
+the factored-attention unit contract on synthetic low-rank KV, and the
+no-silent-clamping error paths.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import smoke_config
+from repro.models import cache as cache_mod
+from repro.models import layers as L
+from repro.models import registry as R
+from repro.models import transformer as T
+from repro.serve import kv_compress
+from repro.serve.engine import Engine, Request
+from repro import stream
+
+jax.config.update("jax_platform_name", "cpu")
+
+KEY = jax.random.PRNGKey(11)
+
+
+def _qwen(max_seq=64):
+    cfg = smoke_config(R.get_arch("qwen3-0.6b"))
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _run_teacher_forced(engines, prompts, max_new, vocab, steps=64):
+    """Drive engines in lockstep on identical token streams: after every
+    batched step the sampled token is overwritten with a shared pseudo-
+    random one, so per-step logits stay comparable even where argmax would
+    tie-break differently.  Returns per-step max |logit diff| vs engines[0].
+    """
+    for eng in engines:
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new=max_new))
+    rng = np.random.default_rng(0)
+    forced = rng.integers(0, vocab, size=steps + 1)
+    diffs = []
+    step = 0
+    while any(e.queue or any(e.active) for e in engines) and step < steps:
+        counts = [e.step() for e in engines]
+        assert len(set(counts)) == 1, counts
+        if all(e.last_logits is not None for e in engines):
+            live = [s for s in range(engines[0].slots)
+                    if engines[0].active[s] is not None]
+            ref = np.asarray(engines[0].last_logits)
+            for e in engines[1:]:
+                d = np.abs(np.asarray(e.last_logits)[live] - ref[live])
+                diffs.append(float(d.max()) if d.size else 0.0)
+        for e in engines:
+            for s in range(e.slots):
+                if e.active[s] is not None and e.active[s].out:
+                    e.active[s].out[-1] = int(forced[step])
+        step += 1
+    return diffs
+
+
+# ---------------------------------------------------------------------------
+# End-to-end decode equivalence
+# ---------------------------------------------------------------------------
+
+def test_decode_equivalence_compression_on_vs_off():
+    """rank == head_dim makes every rank-r swap numerically exact (any
+    (S, hd) history has rank <= hd, so Q·Q^T·K == K to f32 rounding) —
+    logits with compression enabled must match the dense engine within the
+    documented tolerance (DESIGN.md §12: 1e-1 on f32 logits, bf16 residual
+    stream) while slots actually compress and re-compress."""
+    cfg, params = _qwen()
+    rank = cfg.head_dim
+    eng_c = Engine(cfg, params, slots=2, max_seq=64, kv_sketch_rank=rank,
+                   kv_compress_ratio=1.0)
+    eng_d = Engine(cfg, params, slots=2, max_seq=64)
+    diffs = _run_teacher_forced([eng_d, eng_c],
+                                [[5, 7, 11, 2], [3, 9, 1, 4]],
+                                max_new=30, vocab=cfg.vocab)
+    assert diffs, "engines never decoded in lockstep"
+    assert max(diffs) < 1e-1, max(diffs)
+    # every slot swapped, and re-compressed as the tail regrew
+    assert (eng_c._kv_comp_len > 0).all(), eng_c._kv_comp_len
+    assert (eng_c._kv_comp_len > eng_c._kv_threshold).all(), \
+        "no slot re-compressed after the first swap"
+
+
+def test_compressed_slot_hbm_bytes_strictly_drop():
+    """rank << head_dim: the factored representation must need strictly
+    fewer bytes than the dense rows it replaced, for every compressed
+    slot."""
+    cfg, params = _qwen()
+    eng = Engine(cfg, params, slots=2, max_seq=64, kv_sketch_rank=4,
+                 kv_compress_ratio=2.0)
+    for i in range(2):
+        eng.submit(Request(rid=i, prompt=[1 + i, 2, 3], max_new=24))
+    while eng.queue or any(eng.active):
+        eng.step()
+    rep = eng.kv_bytes_report()
+    assert all(r["comp_len"] > 0 for r in rep["slots"])
+    for r in rep["slots"]:
+        assert r["compressed_bytes"] < r["dense_bytes"], r
+    assert rep["compressed_bytes"] < rep["dense_bytes"]
+
+
+# ---------------------------------------------------------------------------
+# Incremental sketch path stays bitwise-equal after swap-in
+# ---------------------------------------------------------------------------
+
+class _RecordingEngine(Engine):
+    """Snapshots every row span fed to the sketches — the true cache rows,
+    captured BEFORE any swap zeroes them — so a from-scratch recompute can
+    replay the identical stream."""
+
+    def __init__(self, *a, **kw):
+        self.recorded = {}           # (slot, path) -> [(start, rows np)]
+        super().__init__(*a, **kw)
+
+    def _append_slot_sketches(self, slot, start, length):
+        for path in self._kv_paths:
+            rows = np.asarray(self._kv_leaf_rows(path, slot, start, length))
+            self.recorded.setdefault((slot, path), []).append((start, rows))
+        super()._append_slot_sketches(slot, start, length)
+
+
+def test_kv_factors_bitwise_equal_full_recompute_after_swap():
+    """After a swap-in (dense prefix zeroed, tail appended at absolute
+    offsets), the engine's incremental sketch must still equal a fresh
+    sketch replaying the same rows — bit for bit — and so must the factors
+    finalized against the engine's post-swap history view."""
+    cfg, params = _qwen()
+    rank = 4
+    eng = _RecordingEngine(cfg, params, slots=1, max_seq=64,
+                           kv_sketch_rank=rank, kv_compress_ratio=2.0)
+    eng.submit(Request(rid=0, prompt=[5, 7, 11], max_new=24))
+    while eng.queue or any(eng.active):
+        eng.step()
+    assert eng._kv_comp_len[0] > 0, "slot never swapped"
+    facs = eng.kv_factors(0)
+    for j, path in enumerate(eng._kv_paths):
+        spans = eng.recorded[(0, path)]
+        key = jax.random.fold_in(jax.random.fold_in(eng._kv_key, 0), j)
+        heads, d = spans[0][1].shape[0], spans[0][1].shape[-1]
+        st = kv_compress.kv_sketch_init(key, heads, d, eng.max_seq, rank)
+        for start, rows in spans:
+            st = kv_compress.kv_sketch_append(st, jnp.asarray(rows), start)
+        np.testing.assert_array_equal(
+            np.asarray(st.y), np.asarray(eng._kv_sketches[0][path].y),
+            err_msg=f"sketch diverged: {path}")
+        ref = kv_compress.kv_sketch_factor(st, eng._kv_hist(0, path), rank)
+        np.testing.assert_array_equal(np.asarray(facs[path].us),
+                                      np.asarray(ref.us), err_msg=str(path))
+        np.testing.assert_array_equal(np.asarray(facs[path].vt),
+                                      np.asarray(ref.vt), err_msg=str(path))
+
+
+def test_kv_sketch_append_post_swap_tail_offsets():
+    """Unit-level satellite fix: appends at absolute dense-tail offsets
+    (comp_len + i) reproduce the full-history recompute bit for bit — the
+    offset origin is the sequence start, not the surviving dense span."""
+    heads, hd, max_seq, rank = 2, 16, 48, 4
+    hist = jax.random.normal(jax.random.PRNGKey(4), (heads, max_seq, hd))
+    comp_len = 20
+    inc = kv_compress.kv_sketch_init(KEY, heads, hd, max_seq, rank)
+    inc = kv_compress.kv_sketch_append(inc, hist[:, :comp_len], 0)
+    # swap happens here; tail rows append at absolute offsets
+    for t in range(comp_len, 36):
+        inc = kv_compress.kv_sketch_append(inc, hist[:, t:t + 1], t)
+    one = kv_compress.kv_sketch_init(KEY, heads, hd, max_seq, rank)
+    one = kv_compress.kv_sketch_append(one, hist[:, :36], 0)
+    np.testing.assert_array_equal(np.asarray(inc.y), np.asarray(one.y))
+    f_inc = kv_compress.kv_sketch_factor(inc, hist, rank)
+    f_one = kv_compress.kv_sketch_factor(one, hist, rank)
+    np.testing.assert_array_equal(np.asarray(f_inc.us), np.asarray(f_one.us))
+    np.testing.assert_array_equal(np.asarray(f_inc.vt), np.asarray(f_one.vt))
+
+
+# ---------------------------------------------------------------------------
+# Factored decode attention: unit contract on synthetic low-rank KV
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cap", [0.0, 50.0])
+def test_factored_decode_attention_matches_dense_on_low_rank(cap):
+    """Prefix rows drawn exactly rank-r: attending through the factors with
+    the dense prefix ZEROED must match dense attention over the true rows
+    (tight f32 tolerance — the swap itself is exact here, so any gap would
+    be a masking/softmax bug, not approximation error)."""
+    B, S, H, KV, hd, r = 2, 32, 4, 2, 16, 5
+    wp = 20
+    comp = jnp.asarray([12, 0], jnp.int32)     # one compressed, one not
+    k = jax.random.fold_in(KEY, 1)
+    us_k, us_v = (jax.random.normal(jax.random.fold_in(k, i),
+                                    (B, KV, S, r)) for i in (1, 2))
+    vt_k, vt_v = (jax.random.normal(jax.random.fold_in(k, i),
+                                    (B, KV, r, hd)) for i in (3, 4))
+    idx = jnp.arange(S)
+    pm = (idx[None, :] < comp[:, None])[:, None, :, None]
+    us_k, us_v = us_k * pm, us_v * pm          # contract: rows >= comp zero
+    k_full = jax.random.normal(jax.random.fold_in(k, 5), (B, S, KV, hd))
+    v_full = jax.random.normal(jax.random.fold_in(k, 6), (B, S, KV, hd))
+    pmb = (idx[None, :] < comp[:, None])[..., None, None]
+    k_true = jnp.where(pmb, jnp.einsum("bksr,bkrd->bskd", us_k, vt_k),
+                       k_full)
+    v_true = jnp.where(pmb, jnp.einsum("bksr,bkrd->bskd", us_v, vt_v),
+                       v_full)
+    q = jax.random.normal(jax.random.fold_in(k, 7), (B, 1, H, hd))
+    scale = 1 / math.sqrt(hd)
+    out_f = L.factored_decode_attention(
+        q, jnp.where(pmb, 0.0, k_full), jnp.where(pmb, 0.0, v_full),
+        us_k, vt_k, us_v, vt_v, comp, write_pos=wp, scale=scale, cap=cap)
+    out_d = L.attention(q, k_true, v_true, causal=True, window=None,
+                        scale=scale, cap=cap, q_positions=jnp.asarray([wp]),
+                        kv_positions=jnp.arange(S))
+    np.testing.assert_allclose(np.asarray(out_f), np.asarray(out_d),
+                               atol=5e-6, rtol=1e-5)
+
+
+def test_build_kv_factors_eligibility():
+    """Factored leaves exist exactly for full-context attention layers:
+    windowed and recurrent mixers get empty dicts, scan leaves lead with
+    periods."""
+    cfg = smoke_config(R.get_arch("gemma2-2b"))     # (local 16, global)
+    f = cache_mod.build_kv_factors(cfg, 2, 48, 4)
+    assert f["scan"][0] == {}                        # windowed position
+    assert set(f["scan"][1]) == {"k_us", "k_vt", "v_us", "v_vt"}
+    assert f["scan"][1]["k_us"].shape == (
+        cfg.n_scan_periods, 2, cfg.n_kv_heads, 48, 4)
+    cfg2 = smoke_config(R.get_arch("recurrentgemma-2b"))
+    f2 = cache_mod.build_kv_factors(cfg2, 2, 48, 4)
+    assert all(d == {} for d in f2["scan"])          # rglru + windowed attn
+
+
+# ---------------------------------------------------------------------------
+# Rolling sketches inside the engine (sliding-window layers)
+# ---------------------------------------------------------------------------
+
+def test_engine_rolling_sketch_matches_fresh_window_sketch():
+    """gemma2 smoke alternates local(window)/global attention: windowed
+    leaves must get rolling sketches whose finalized factors equal a fresh
+    sketch of the cache's current window — bit for bit."""
+    cfg = smoke_config(R.get_arch("gemma2-2b"))
+    params = T.init_params(cfg, jax.random.PRNGKey(1))
+    eng = Engine(cfg, params, slots=1, max_seq=48, kv_sketch_rank=4)
+    assert eng._kv_roll_paths and eng._kv_paths
+    eng.submit(Request(rid=0, prompt=[5, 6, 7], max_new=28))
+    while eng.queue or any(eng.active):
+        eng.step()
+    facs = eng.kv_factors(0)
+    for path in eng._kv_roll_paths:
+        st = eng._kv_sketches[0][path]
+        window = st.window
+        total = int(st.rows_seen.max())
+        assert total > window, "run long enough to wrap the ring"
+        hist = eng._kv_ring_hist(0, path)            # window-ordered rows
+        j = eng._kv_roll_paths.index(path)
+        keys = jax.random.split(eng._kv_roll_key(0, j), hist.shape[0])
+        p = kv_compress._sketch_width(4, hist.shape[-1])
+
+        def fresh_factor(key_h, rows):
+            f = stream.init(key_h, rows.shape[-1], p, max_rows=window,
+                            method="shgemm")
+            f = stream.update(f, rows.astype(jnp.float32), 0)
+            return kv_compress._factor_one(f, rows.astype(jnp.float32), 4)
+        ref = jax.vmap(fresh_factor)(keys, hist)
+        np.testing.assert_array_equal(np.asarray(facs[path].us),
+                                      np.asarray(ref.us), err_msg=str(path))
+        np.testing.assert_array_equal(np.asarray(facs[path].vt),
+                                      np.asarray(ref.vt), err_msg=str(path))
+
+
+# ---------------------------------------------------------------------------
+# Error paths: clear ValueErrors, no silent clamping
+# ---------------------------------------------------------------------------
+
+def test_error_paths():
+    cfg, params = _qwen()
+    # kv_factors without sketching / on a never-admitted slot
+    plain = Engine(cfg, params, slots=1, max_seq=32)
+    with pytest.raises(ValueError, match="no sketch state"):
+        plain.kv_factors(0)
+    eng = Engine(cfg, params, slots=2, max_seq=32, kv_sketch_rank=4,
+                 kv_compress_ratio=2.0)
+    with pytest.raises(ValueError, match="never|no sketch state"):
+        eng.kv_factors(1)
+    # compress without the compression feature enabled
+    sk_only = Engine(cfg, params, slots=1, max_seq=32, kv_sketch_rank=4)
+    with pytest.raises(ValueError, match="without kv_compress_ratio"):
+        sk_only.compress_slot(0)
+    # re-compression of an already-fully-factored slot (no new tail rows)
+    eng.submit(Request(rid=0, prompt=[2, 3, 4], max_new=12))
+    while eng.queue or any(eng.active):
+        eng.step()
+    assert eng._kv_comp_len[0] > 0
+    if eng.pos[0] > eng._kv_comp_len[0]:
+        eng.compress_slot(0)                 # legit: compress the last tail
+    with pytest.raises(ValueError, match="already fully factored"):
+        eng.compress_slot(0)
+    # constructor validation
+    with pytest.raises(ValueError, match="requires kv_sketch_rank"):
+        Engine(cfg, params, slots=1, max_seq=32, kv_compress_ratio=2.0)
+    with pytest.raises(ValueError, match=">= 1"):
+        Engine(cfg, params, slots=1, max_seq=32, kv_sketch_rank=4,
+               kv_compress_ratio=0.5)
+    rg = smoke_config(R.get_arch("recurrentgemma-2b"))
+    with pytest.raises(ValueError, match="no full-context attention"):
+        Engine(rg, T.init_params(rg, jax.random.PRNGKey(2)), slots=1,
+               max_seq=32, kv_sketch_rank=4, kv_compress_ratio=2.0)
+
+
+def test_staggered_admission_never_compresses():
+    """The uniform slot clock writes decode rows at write_pos = max(pos):
+    a request admitted into a freed slot while another is mid-stream gets
+    rows beyond its own pos — a gap the sketch never streams.  Such slots
+    must refuse to compress (comp_len would diverge from the sketch
+    high-water and re-compression would double-count rows) while synced
+    slots keep compressing normally."""
+    cfg, params = _qwen()
+    eng = Engine(cfg, params, slots=2, max_seq=64, kv_sketch_rank=4,
+                 kv_compress_ratio=2.0)
+    eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new=40))
+    eng.submit(Request(rid=1, prompt=[4, 5, 6], max_new=4))
+    eng.submit(Request(rid=2, prompt=[7, 8, 9], max_new=20))  # queued
+    while eng.queue or any(eng.active):
+        eng.step()
+    # rid=2 landed in rid=1's freed slot mid-stream: flagged non-contiguous
+    lagging = [s for s in range(2) if not eng._kv_contig[s]]
+    synced = [s for s in range(2) if eng._kv_contig[s]]
+    assert lagging and synced, (eng._kv_contig, eng._kv_comp_len)
+    for s in lagging:
+        assert eng._kv_comp_len[s] == 0, "gapped slot must not compress"
+        with pytest.raises(ValueError, match="admitted mid-stream"):
+            eng.compress_slot(s)
+    for s in synced:
+        assert eng._kv_comp_len[s] > 0
+
+
+def test_kv_sketch_append_offset_errors():
+    """Overrunning max_seq fails loudly, naming the absolute-offset origin
+    (the silent dynamic_update_slice clamp would corrupt earlier rows)."""
+    st = kv_compress.kv_sketch_init(KEY, 2, 16, 8, 4)
+    rows = jnp.zeros((2, 4, 16))
+    with pytest.raises(ValueError, match="absolute history offset"):
+        kv_compress.kv_sketch_append(st, rows, 6)
+    with pytest.raises(ValueError, match="n_heads, T, head_dim"):
+        kv_compress.kv_sketch_append(st, jnp.zeros((4, 16)), 0)
+    with pytest.raises(ValueError, match="n_heads, T, head_dim"):
+        kv_compress.kv_rolling_append(
+            kv_compress.kv_rolling_init(KEY, 2, 16, 8, 4),
+            jnp.zeros((4, 16)), 0)

@@ -1,0 +1,198 @@
+"""Rolling (sliding-window) sketch: stream/rolling.py unit contract.
+
+The load-bearing invariant (DESIGN.md §12): after any monotone stream of row
+tiles, ``rolling_finalize`` equals a FRESH sketch of the current window —
+bit for bit for the fused counter-hash method (per-row sketches are pure
+functions of (row data, key)), to f32 GEMM tolerance for the legacy methods.
+Plus: decay semantics, wraparound, vmap (the engine's per-head batching),
+and the no-silent-clamping error paths.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import stream
+
+jax.config.update("jax_platform_name", "cpu")
+
+KEY = jax.random.PRNGKey(7)
+N, P, W = 24, 8, 16
+A = np.asarray(jax.random.normal(jax.random.PRNGKey(3), (80, N),
+                                 jnp.float32))
+
+
+def _fresh_window(key, rows, method):
+    st = stream.init(key, N, P, max_rows=W, method=method)
+    return stream.update(st, jnp.asarray(rows), 0)
+
+
+def _roll_many(rs, rows, pos=0, chunk=8):
+    for off in range(0, len(rows), chunk):
+        rs = stream.rolling_update(rs, rows[off:off + chunk], pos + off)
+    return rs
+
+
+@pytest.mark.parametrize("method", ["shgemm_fused", "shgemm"])
+@pytest.mark.parametrize("total", [5, 16, 17, 40, 80])
+def test_finalize_matches_fresh_window_sketch(method, total):
+    """Slide past ``total`` rows in ragged tiles, finalize, compare against
+    a fresh sketch of the trailing window — bitwise for the fused method."""
+    rs = stream.rolling_init(KEY, N, P, window=W, method=method)
+    pos = 0
+    for c in (3, 1, 7, 16, 9, 14, 10, 6, 8, 16):
+        if pos >= total:
+            break
+        c = min(c, total - pos)
+        rs = stream.rolling_update(rs, A[pos:pos + c], pos)
+        pos += c
+    assert pos == total
+    fin = stream.rolling_finalize(rs)
+    live = min(total, W)
+    fresh = _fresh_window(KEY, A[total - live:total], method)
+    assert int(fin.rows_seen) == live == int(fresh.rows_seen)
+    if method == "shgemm_fused":
+        np.testing.assert_array_equal(np.asarray(fin.y),
+                                      np.asarray(fresh.y))
+    else:
+        np.testing.assert_allclose(np.asarray(fin.y), np.asarray(fresh.y),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_finalize_is_a_plain_sketch_state():
+    """Downstream consumers (range_basis, kv factorization) see an ordinary
+    window-sized SketchState: Q projects the window to the sketch range."""
+    rs = stream.rolling_init(KEY, N, P, window=W)
+    rs = _roll_many(rs, A[:40])
+    fin = stream.rolling_finalize(rs)
+    assert fin.max_rows == W and fin.p == P
+    q = stream.range_basis(fin)
+    assert q.shape == (W, P)
+    win = jnp.asarray(A[24:40])
+    resid = win - q @ (q.T @ win)
+    # Y = A·Omega spans a random projection of the window's row space; for
+    # a random 16x24 window a p=8 basis captures a meaningful fraction
+    assert float(jnp.linalg.norm(resid)) < float(jnp.linalg.norm(win))
+
+
+def test_default_append_position():
+    """pos defaults to the high-water mark (pure append)."""
+    rs = stream.rolling_init(KEY, N, P, window=W)
+    rs = stream.rolling_update(rs, A[:10])
+    rs = stream.rolling_update(rs, A[10:20])
+    fin = stream.rolling_finalize(rs)
+    fresh = _fresh_window(KEY, A[4:20], "shgemm_fused")
+    np.testing.assert_array_equal(np.asarray(fin.y), np.asarray(fresh.y))
+
+
+def test_decay_weights_window_rows():
+    """decay=g finalizes to the fresh sketch of diag(g^age)·window — the
+    newest row unweighted, ages counted from the window's newest row."""
+    g = 0.5
+    rs = stream.rolling_init(KEY, N, P, window=W, decay=g, method="shgemm")
+    rs = _roll_many(rs, A[:30])
+    fin = stream.rolling_finalize(rs)
+    win = A[30 - W:30].copy()
+    age = np.arange(W - 1, -1, -1, dtype=np.float32)
+    ref = _fresh_window(KEY, win * (g ** age)[:, None], "shgemm")
+    np.testing.assert_allclose(np.asarray(fin.y), np.asarray(ref.y),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_capacity_larger_than_window():
+    """max_rows > window: the ring holds history beyond the window, but a
+    finalize still exposes exactly the trailing ``window`` rows."""
+    rs = stream.rolling_init(KEY, N, P, window=8, max_rows=W)
+    rs = _roll_many(rs, A[:20])
+    fin = stream.rolling_finalize(rs)
+    fresh = stream.init(KEY, N, P, max_rows=8, method="shgemm_fused")
+    fresh = stream.update(fresh, jnp.asarray(A[12:20]), 0)
+    np.testing.assert_array_equal(np.asarray(fin.y), np.asarray(fresh.y))
+
+
+def test_vmap_per_head_batching():
+    """The serving engine vmaps rolling states over heads."""
+    ks = jax.random.split(KEY, 3)
+    states = jax.vmap(lambda k: stream.rolling_init(k, N, P, window=W))(ks)
+    rows = jnp.stack([jnp.asarray(A[i:i + 16]) for i in (0, 20, 40)])
+    states = jax.vmap(lambda s, r: stream.rolling_update(s, r, 0))(states,
+                                                                   rows)
+    fins = jax.vmap(stream.rolling_finalize)(states)
+    assert fins.y.shape == (3, W, P)
+    for h, off in enumerate((0, 20, 40)):
+        ref = _fresh_window(ks[h], A[off:off + 16], "shgemm_fused")
+        np.testing.assert_array_equal(np.asarray(fins.y[h]),
+                                      np.asarray(ref.y))
+
+
+def test_gap_rows_count_as_zero():
+    """A position jump leaves gap rows ZERO in the finalized window — the
+    lap-old sketches that lived in the skipped ring slots must not leak
+    (they would contaminate factors with rows that left the window)."""
+    rs = stream.rolling_init(KEY, N, P, window=W)
+    rs = _roll_many(rs, A[:W])               # full lap: every slot occupied
+    gap_to = W + 6                           # skip positions [W, W+6)
+    rs = stream.rolling_update(rs, A[gap_to:gap_to + 4], gap_to)
+    fin = stream.rolling_finalize(rs)
+    # window = positions [gap_to+4-W, gap_to+4): rows before the gap keep
+    # their sketches, gap rows are exactly zero, appended rows are live
+    fresh_rows = np.zeros((W, N), np.float32)
+    lo = gap_to + 4 - W
+    fresh_rows[:W - lo] = A[lo:W]            # pre-gap positions still live
+    fresh_rows[W - lo + 6:] = A[gap_to:gap_to + 4]
+    fresh = _fresh_window(KEY, fresh_rows, "shgemm_fused")
+    gap_rows = np.asarray(fin.y)[W - lo:W - lo + 6]
+    np.testing.assert_array_equal(gap_rows, np.zeros_like(gap_rows))
+    np.testing.assert_array_equal(np.asarray(fin.y)[:W - lo],
+                                  np.asarray(fresh.y)[:W - lo])
+    np.testing.assert_array_equal(np.asarray(fin.y)[W - lo + 6:],
+                                  np.asarray(fresh.y)[W - lo + 6:])
+
+
+def test_kv_rolling_append_monotone_guard_outside_vmap():
+    """rolling_update's own monotone check cannot fire inside the per-head
+    vmap (rows_seen is a tracer there); the batched kv_rolling_append entry
+    point must raise on a regressed position instead of silently rewriting
+    ring history."""
+    from repro.serve import kv_compress
+    st = kv_compress.kv_rolling_init(KEY, 2, N, W, 4)
+    rows = jnp.zeros((2, 4, N))
+    st = kv_compress.kv_rolling_append(st, rows, 0)
+    with pytest.raises(ValueError, match="behind the rolling sketch"):
+        kv_compress.kv_rolling_append(st, rows, 1)
+
+
+def test_error_paths_no_silent_clamping():
+    with pytest.raises(ValueError, match="window 32 exceeds ring capacity"):
+        stream.rolling_init(KEY, N, P, window=32, max_rows=16)
+    with pytest.raises(ValueError, match="must be positive"):
+        stream.rolling_init(KEY, N, P, window=0)
+    with pytest.raises(ValueError, match="decay"):
+        stream.rolling_init(KEY, N, P, window=W, decay=1.5)
+    with pytest.raises(ValueError, match="exceeds n_cols"):
+        stream.rolling_init(KEY, N, N + 1, window=W)
+    rs = stream.rolling_init(KEY, N, P, window=W)
+    with pytest.raises(ValueError, match="exceeds ring capacity"):
+        stream.rolling_update(rs, A[:W + 1], 0)
+    with pytest.raises(ValueError, match="2-D row tile"):
+        stream.rolling_update(rs, A[None, :4], 0)
+    with pytest.raises(ValueError, match="columns"):
+        stream.rolling_update(rs, A[:4, :N - 1], 0)
+    rs = stream.rolling_update(rs, A[:10], 0)
+    with pytest.raises(ValueError, match="monotone"):
+        stream.rolling_update(rs, A[:2], 4)
+    with pytest.raises(ValueError, match=">= 0"):
+        stream.rolling_update(stream.rolling_init(KEY, N, P, window=W),
+                              A[:2], -1)
+
+
+def test_no_left_sketch_for_rolling():
+    """Rolling states are right-only; the single-pass svd finalizer must
+    reject the finalized state with its usual clear error."""
+    rs = stream.rolling_init(KEY, N, P, window=W)
+    rs = stream.rolling_update(rs, A[:W], 0)
+    fin = stream.rolling_finalize(rs)
+    with pytest.raises(ValueError, match="left sketch"):
+        stream.svd(fin, 4)

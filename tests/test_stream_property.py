@@ -2,14 +2,19 @@
 like tests/test_property_based.py: the module skips itself where hypothesis
 is not installed instead of erroring collection.
 
-Properties (DESIGN.md §10/§11):
+Properties (DESIGN.md §10/§11/§12):
 
   * any random row tiling + any partition of the tiles into two states +
     any update order is bit-identical to sequential one-shot accumulation
     for the fused method (write semantics + disjoint-row merge);
   * streamed power iteration never hurts: reconstruction error is
     monotonically non-increasing (to the rounding floor) in ``passes`` on
-    the paper's §3.3 type1/type2 spectra.
+    the paper's §3.3 type1/type2 spectra;
+  * rolling sketches: sliding the window k steps under any monotone tiling
+    then finalizing equals the fresh sketch of the final window (bitwise
+    for the fused method, tolerance-pinned for the legacy GEMMs), and the
+    finalized state obeys the same disjoint-row merge algebra as ordinary
+    states.
 """
 
 import numpy as np
@@ -82,3 +87,73 @@ def test_more_passes_never_hurt(name, seed, tile):
     assert errs[3] <= errs[2] * 1.02 + 2e-7, (name, seed, errs)
     assert errs[4] <= errs[3] * 1.02 + 2e-7, (name, seed, errs)
     assert errs[4] <= errs[2] * 1.005 + 1e-7, (name, seed, errs)
+
+
+# ---------------------------------------------------------------------------
+# Rolling (sliding-window) sketches — DESIGN.md §12
+# ---------------------------------------------------------------------------
+
+W_ROLL = 24
+_B = np.asarray(jax.random.normal(jax.random.PRNGKey(5), (120, N),
+                                  jnp.float32))
+
+
+def _monotone_tiles(total, cuts):
+    bounds = [0] + sorted({c % total for c in cuts} - {0}) + [total]
+    tiles = [(lo, hi) for lo, hi in zip(bounds, bounds[1:]) if hi > lo]
+    # split anything wider than the ring so the update accepts it
+    out = []
+    for lo, hi in tiles:
+        while hi - lo > W_ROLL:
+            out.append((lo, lo + W_ROLL))
+            lo += W_ROLL
+        out.append((lo, hi))
+    return out
+
+
+@settings(max_examples=8, deadline=None, derandomize=True)
+@given(total=st.integers(4, 120),
+       cuts=st.lists(st.integers(1, 119), max_size=8),
+       method=st.sampled_from(["shgemm_fused", "shgemm"]))
+def test_rolling_slide_then_finalize_equals_fresh_window(total, cuts,
+                                                         method):
+    """Any monotone tiling of a k-step slide finalizes to the fresh sketch
+    of the final window: bitwise for the fused counter-hash stream,
+    tolerance-pinned (1e-5) for the legacy GEMM methods whose per-row
+    blocking jax may schedule differently across tile heights."""
+    rs = stream.rolling_init(KEY, N, P, window=W_ROLL, method=method)
+    for lo, hi in _monotone_tiles(total, cuts):
+        rs = stream.rolling_update(rs, _B[lo:hi], lo)
+    fin = stream.rolling_finalize(rs)
+    live = min(total, W_ROLL)
+    fresh = stream.init(KEY, N, P, max_rows=W_ROLL, method=method)
+    fresh = stream.update(fresh, jnp.asarray(_B[total - live:total]), 0)
+    assert int(fin.rows_seen) == live
+    if method == "shgemm_fused":
+        np.testing.assert_array_equal(np.asarray(fin.y),
+                                      np.asarray(fresh.y))
+    else:
+        np.testing.assert_allclose(np.asarray(fin.y), np.asarray(fresh.y),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None, derandomize=True)
+@given(total=st.integers(W_ROLL + 1, 120), split=st.integers(1, W_ROLL - 1))
+def test_rolling_finalize_obeys_merge_invariance(total, split):
+    """The finalized rolling state is an ordinary SketchState: splitting the
+    final window's rows across two fresh states and merging reproduces it
+    bit for bit (the same disjoint-row merge algebra the linear suite
+    pins), in either merge order."""
+    rs = stream.rolling_init(KEY, N, P, window=W_ROLL)
+    for lo in range(0, total, W_ROLL):
+        rs = stream.rolling_update(rs, _B[lo:min(lo + W_ROLL, total)], lo)
+    fin = stream.rolling_finalize(rs)
+    win = _B[total - W_ROLL:total]
+    s1 = stream.init(KEY, N, P, max_rows=W_ROLL, method="shgemm_fused")
+    s2 = stream.init(KEY, N, P, max_rows=W_ROLL, method="shgemm_fused")
+    s1 = stream.update(s1, jnp.asarray(win[:split]), 0)
+    s2 = stream.update(s2, jnp.asarray(win[split:]), split)
+    merged = stream.merge(s1, s2)
+    np.testing.assert_array_equal(np.asarray(fin.y), np.asarray(merged.y))
+    swapped = stream.merge(s2, s1)
+    np.testing.assert_array_equal(np.asarray(fin.y), np.asarray(swapped.y))
