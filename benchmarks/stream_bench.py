@@ -11,7 +11,9 @@ Side effect: ``run()`` writes BENCH_stream.json at the repo root (same
 contract as BENCH_shgemm.json) so the perf trajectory is tracked across
 PRs.  ``python -m benchmarks.stream_bench --smoke`` runs a seconds-scale
 shape for the CI smoke step and asserts the streamed/one-shot bit-identity
-invariant end to end.
+invariant end to end; ``--smoke-source`` covers all five TileSource kinds,
+``--smoke-adaptive`` the tol-driven widening driver on object-store tiles
+(DESIGN.md §13), ``--smoke-kv`` the compressed-attention engine.
 """
 
 from __future__ import annotations
@@ -267,6 +269,65 @@ def kv_serving_rows(records=None, *, slots=3, max_seq=128, rank=4,
         f"hbm_ratio={rec['hbm_ratio']}x")]
 
 
+def adaptive_rsvd_rows(records=None, *, n=224, rank=8, oversample=2,
+                       tol=5.5e-2, max_oversample=64, tile=56) -> list:
+    """Adaptive rank-revealing streamed rSVD over OBJECT-STORE tiles
+    (DESIGN.md §13): ``rsvd_streamed(tol=...)`` on a shard-manifest layout
+    read through byte ranges.  Asserts the two acceptance criteria — the
+    grown state's factorization is bit-identical to a one-shot run at the
+    final width, and the widen passes' sketch bytes scale with the ADDED
+    columns, not the full width — and records the counters."""
+    key = jax.random.PRNGKey(5)
+    # spectrum chosen so the true rank-8 tail (~5.0e-2 relative) sits well
+    # above the f32 estimator floor AND the starting width's estimate
+    # (~6.7e-2) sits above tol: exactly one deterministic widen pass
+    a = rsvd.matrix_with_singular_values(
+        key, n, rsvd.singular_values_exp(n, rank, 5e-2))
+    with tempfile.TemporaryDirectory() as td:
+        shards = os.path.join(td, "shards")
+        pipeline.write_matrix_shards(shards, np.asarray(a), 2 * tile)
+        src = stream.ObjectStoreSource(shards, tile_rows=tile)
+
+        t0 = time.perf_counter()
+        res, info = rsvd.rsvd_streamed(
+            key, src, rank, oversample=oversample, tol=tol,
+            max_oversample=max_oversample, return_info=True)
+        dt = time.perf_counter() - t0
+        assert info.widen_passes >= 1, info
+        assert info.converged, info
+        # acceptance: widen work scales with the added columns only
+        assert info.grown_sketch_bytes < info.full_resketch_bytes, info
+        # acceptance: grown state == one-shot sketch at the final width,
+        # bit for bit, through the whole factorization
+        fresh = rsvd.rsvd_streamed(key, src, rank,
+                                   oversample=info.final_p - rank)
+        for field, got, want in zip(res._fields, res, fresh):
+            np.testing.assert_array_equal(
+                np.asarray(got), np.asarray(want),
+                err_msg=f"adaptive != fresh at final width: {field}")
+    err = float(rsvd.reconstruction_error(a, res))
+    rec = {
+        "kind": "adaptive_rsvd", "n": n, "rank": rank, "tol": tol,
+        "oversample_start": oversample, "max_oversample": max_oversample,
+        "tile": tile, "final_p": info.final_p,
+        "widen_passes": info.widen_passes, "grown_cols": info.grown_cols,
+        "grown_sketch_bytes": info.grown_sketch_bytes,
+        "full_resketch_bytes": info.full_resketch_bytes,
+        "sketch_bytes_saved_ratio": round(
+            info.full_resketch_bytes / max(info.grown_sketch_bytes, 1), 3),
+        "est_final": info.est_history[-1], "err": err,
+        "us": round(dt * 1e6, 2),
+    }
+    if records is not None:
+        records.append(rec)
+    return [row(
+        f"stream.adaptive_rsvd.{n}.r{rank}", dt * 1e6,
+        f"final_p={info.final_p};widens={info.widen_passes};"
+        f"grown_bytes={info.grown_sketch_bytes};"
+        f"full_resketch_bytes={info.full_resketch_bytes};"
+        f"est={info.est_history[-1]:.2e};err={err:.2e}")]
+
+
 def _merge_bench_json(records, kinds) -> None:
     """Replace records of ``kinds`` in BENCH_stream.json, keep the rest —
     smoke steps must not clobber the full run()'s rows."""
@@ -287,6 +348,7 @@ def run() -> list:
     rows = (update_throughput(records=records)
             + rsvd_streamed_bench(records=records)
             + memmap_source_rows(records=records)
+            + adaptive_rsvd_rows(records=records)
             + kv_serving_rows(records=records))
     with open(BENCH_JSON, "w") as f:
         json.dump(records, f, indent=1)
@@ -338,6 +400,9 @@ def smoke_source() -> None:
             "memmap": pipeline.matrix_tile_source(npy, tile_rows=tile),
             "directory": pipeline.matrix_tile_source(
                 os.path.join(td, "shards"), tile_rows=tile),
+            "objectstore": pipeline.matrix_tile_source(
+                os.path.join(td, "shards"), tile_rows=tile,
+                range_reads=True),
             "generator": stream.GeneratorSource(
                 lambda: (a[i:i + tile] for i in range(0, m, tile)), (m, n)),
         }
@@ -360,9 +425,28 @@ def smoke_source() -> None:
         assert abs(err_s - err_1) <= 1e-5, (err_s, err_1)
         res_p = rsvd.rsvd_streamed(key, src, rank, passes=4)
         err_p = float(rsvd.reconstruction_error(jnp.asarray(a), res_p))
-        print(f"stream-source smoke OK: 4/4 source kinds bit-identical, "
+        print(f"stream-source smoke OK: {len(sources)}/{len(sources)} "
+              f"source kinds bit-identical, "
               f"memmap rsvd err {err_s:.3e} (in-core {err_1:.3e}, "
               f"passes=4 {err_p:.3e})")
+
+
+def smoke_adaptive() -> None:
+    """CI `adaptive-rsvd` smoke: tol-driven widening on object-store tiles.
+    ``adaptive_rsvd_rows`` itself asserts the acceptance criteria (>= 1
+    widen pass, bitwise identity to the one-shot run at the final width,
+    added-columns-only sketch bytes); this step merges the row into
+    BENCH_stream.json.  Seconds, not minutes."""
+    records = []
+    adaptive_rsvd_rows(records=records)
+    _merge_bench_json(records, {"adaptive_rsvd"})
+    rec = records[0]
+    print(f"adaptive-rsvd smoke OK: p {rec['rank'] + rec['oversample_start']}"
+          f" -> {rec['final_p']} in {rec['widen_passes']} widen pass(es), "
+          f"grown-cols sketch bytes {rec['grown_sketch_bytes']} vs full "
+          f"re-sketch {rec['full_resketch_bytes']} "
+          f"({rec['sketch_bytes_saved_ratio']}x saved), est "
+          f"{rec['est_final']:.2e} <= tol {rec['tol']} -> {BENCH_JSON}")
 
 
 def smoke_kv() -> None:
@@ -386,6 +470,8 @@ if __name__ == "__main__":
     jax.config.update("jax_platform_name", "cpu")
     if "--smoke-source" in sys.argv:
         smoke_source()
+    elif "--smoke-adaptive" in sys.argv:
+        smoke_adaptive()
     elif "--smoke-kv" in sys.argv:
         smoke_kv()
     elif "--smoke" in sys.argv:

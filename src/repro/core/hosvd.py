@@ -14,6 +14,7 @@ from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import projection as proj
 
@@ -97,22 +98,47 @@ def rp_sthosvd_streamed(key: jax.Array, slabs, dims=None, ranks=None, *,
                         method: proj.ProjectionMethod = "shgemm_fused",
                         dist: proj.SketchDist = "gaussian",
                         omega_dtype=jnp.bfloat16,
-                        prefetch_depth: int | None = 1) -> TuckerResult:
+                        prefetch_depth: int | None = 1,
+                        tol: float | None = None,
+                        max_ranks=None) -> TuckerResult:
     """Single-pass streaming Tucker of a tensor that arrives as slabs along
     axis 0 (out-of-core tensors, token/frame streams).
 
     ``slabs`` is anything ``stream.as_tile_source`` accepts — a
-    ``TileSource`` (memmapped ``.npy``, directory of shards, in-memory
-    array) or a plain iterable of ``A[off:off+b, ...]`` slabs in order,
-    tiling axis 0 exactly.  ``dims`` (the full tensor shape) may be omitted
+    ``TileSource`` (memmapped ``.npy``, directory of shards, object-store
+    shards behind range reads, in-memory array) or a plain iterable of
+    ``A[off:off+b, ...]`` slabs in order, tiling axis 0 exactly.  ``dims``
+    (the full tensor shape) may be omitted
     when the source knows it; slabs are double-buffer prefetched
     (DESIGN.md §11, ``prefetch_depth=None`` disables).  Never holds more
     than ``prefetch_depth + 1`` slabs plus the O(sum_i I_i·J_i) sketch
     state — the per-mode Omega_i (whose row count is prod_{j!=i} I_j, the
     *largest* object in one-shot RP-HOSVD) is regenerated block-wise
     in-kernel and never materialized (repro.stream.tucker).
+
+    Per-mode adaptive ranks (``tol=..., max_ranks=...``, DESIGN.md §13):
+    instead of fixed ``ranks``, sketch once at the per-mode ceilings
+    ``max_ranks`` and let :func:`truncate_tucker` pick each mode's rank at
+    finalize — the smallest per-mode ranks whose combined discarded tail
+    keeps the estimated relative error under ``tol``.  Still a single
+    pass: the rank decision needs only the (tiny) core, so "grow between
+    passes" (the rSVD adaptive driver's replay loop) is unnecessary here —
+    the ceilings bound the work and the truncation reveals the rank.
     """
     from repro import stream  # deferred: stream imports this module
+    if tol is not None:
+        if ranks is not None:
+            raise ValueError("pass either fixed ranks= or adaptive "
+                             "tol=+max_ranks=, not both")
+        if max_ranks is None:
+            raise ValueError("adaptive mode (tol=) needs max_ranks= — the "
+                             "per-mode sketch widths / rank ceilings")
+        if float(tol) <= 0.0:
+            raise ValueError(f"tol must be > 0, got {tol}")
+        ranks = tuple(int(r) for r in max_ranks)
+    elif max_ranks is not None:
+        raise ValueError("max_ranks only applies to adaptive (tol=...) "
+                         "runs")
     if ranks is None:
         raise TypeError("rp_sthosvd_streamed missing required ranks")
     try:
@@ -139,7 +165,48 @@ def rp_sthosvd_streamed(key: jax.Array, slabs, dims=None, ranks=None, *,
     if off != dims[0]:
         raise ValueError(f"slabs cover {off} rows of axis 0, expected "
                          f"{dims[0]}")
-    return stream.tucker_finalize(ts)
+    res = stream.tucker_finalize(ts)
+    if tol is not None:
+        res = truncate_tucker(res, tol)
+    return res
+
+
+def truncate_tucker(res: TuckerResult, tol: float, *,
+                    min_rank: int = 1) -> TuckerResult:
+    """Per-mode adaptive rank truncation — the rank-revealing stopping
+    rule for Tucker factorizations (DESIGN.md §13).
+
+    Rotates each mode into the core's singular basis and keeps the
+    smallest rank whose discarded spectral tail fits that mode's share of
+    the error budget (the ST-HOSVD split: per-mode tail² <=
+    tol²·||core||²/N, so the N truncations together keep the total
+    relative error of the *captured* tensor under ``tol``).  ``tol`` is
+    relative to ||core||_F ≈ ||A||_F — an estimate, not a certificate:
+    whatever the fixed-ceiling sketch already lost is not counted
+    (rsvd_streamed's tol= driver is the certified path for matrices).
+    Runs eagerly (data-dependent output shapes cannot live under jit).
+    """
+    if tol <= 0.0:
+        raise ValueError(f"tol must be > 0, got {tol}")
+    core = jnp.asarray(res.core, jnp.float32)
+    factors = list(res.factors)
+    ndim = core.ndim
+    total2 = float(jnp.sum(core * core))
+    budget2 = (float(tol) ** 2) * total2 / ndim
+    for i in range(ndim):
+        u, s, _ = jnp.linalg.svd(unfold(core, i), full_matrices=False)
+        s2 = np.asarray(s, np.float64) ** 2
+        revcum = np.cumsum(s2[::-1])[::-1]  # revcum[r] = sum_{j>=r} s2[j]
+        keep = len(s2)
+        for r in range(max(1, int(min_rank)), len(s2)):
+            if revcum[r] <= budget2:
+                keep = r
+                break
+        factors[i] = jnp.dot(factors[i], u[:, :keep],
+                             precision=jax.lax.Precision.HIGHEST,
+                             preferred_element_type=jnp.float32)
+        core = mode_dot(core, u[:, :keep].T, i)
+    return TuckerResult(core, tuple(factors))
 
 
 def reconstruct(res: TuckerResult) -> jax.Array:

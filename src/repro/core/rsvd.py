@@ -22,9 +22,42 @@ class SVDResult(NamedTuple):
     vt: jax.Array     # (rank, n)
 
 
+class AdaptiveInfo(NamedTuple):
+    """Diagnostics of one adaptive ``rsvd_streamed(tol=...)`` run
+    (DESIGN.md §13).  ``est_history`` holds the relative posterior error
+    estimate after each B pass (one entry per evaluated width);
+    ``bound_history`` the matching relative Halko Eq. (4) expected-error
+    bound (None where the width leaves oversample < 2).  The byte counters
+    are what the widen passes actually wrote to Y
+    (``grown_sketch_bytes``) vs what re-sketching from scratch at each
+    grown width would have written (``full_resketch_bytes``) — the
+    added-columns-only scaling the bench asserts."""
+    final_p: int
+    widen_passes: int
+    converged: bool
+    est_history: tuple
+    bound_history: tuple
+    grown_cols: int
+    grown_sketch_bytes: int
+    full_resketch_bytes: int
+
+
 def _dot(a, b):
     return jnp.dot(a, b, precision=jax.lax.Precision.HIGHEST,
                    preferred_element_type=jnp.float32)
+
+
+def _check_rank(rank: int, m: int, n: int) -> None:
+    """Target ranks above min(m, n) used to be silently absorbed by the
+    ``p_hat = min(rank + oversample, min(m, n))`` clamp and then sliced as
+    ``u[:, :rank]`` — returning an under-ranked factorization with no
+    warning.  Shapes and rank are static, so this raises at trace time,
+    under jit included."""
+    if not 1 <= rank <= min(m, n):
+        raise ValueError(
+            f"rank={rank} is out of range for a {m}x{n} matrix: need "
+            f"1 <= rank <= min(m, n) = {min(m, n)} — the sketch-width clamp "
+            f"would otherwise silently return only min(m, n) columns")
 
 
 @functools.partial(
@@ -42,6 +75,7 @@ def rsvd(key: jax.Array, a: jax.Array, rank: int, *, oversample: int = 10,
     spectra (§2.1); the extra passes run in f32.
     """
     m, n = a.shape
+    _check_rank(rank, m, n)
     p_hat = min(rank + oversample, min(m, n))
 
     # Line 1: Y = A . Omega — THE mixed-precision projection.  Key-based:
@@ -72,7 +106,10 @@ def rsvd_streamed(key: jax.Array, a_blocks, rank: int, *,
                   oversample: int = 10, passes: int = 2,
                   method: proj.ProjectionMethod = "shgemm_fused",
                   omega_dtype=jnp.bfloat16, tile_callback=None,
-                  prefetch_depth: int | None = 1) -> SVDResult:
+                  prefetch_depth: int | None = 1,
+                  tol: float | None = None,
+                  max_oversample: int | None = None,
+                  return_info: bool = False):
     """Randomized SVD of an out-of-core matrix streamed as row tiles.
 
     ``a_blocks`` is anything ``stream.as_tile_source`` accepts: a
@@ -106,11 +143,57 @@ def rsvd_streamed(key: jax.Array, a_blocks, rank: int, *,
         tiled GEMM accumulated in tile order.
 
     ``tile_callback(i, n_seen_rows)``, if given, is invoked per absorbed
-    tile of the sketch pass (progress for multi-hour out-of-core runs).
+    tile of the initial sketch pass (progress for multi-hour out-of-core
+    runs).
+
+    Adaptive rank-revealing mode (``tol=...``, DESIGN.md §13): instead of
+    trusting the fixed paper oversampling (s=10, §5.1), grow the sketch
+    width between passes until the rank-``rank`` truncation error is
+    certified under ``tol``.  After each B = QᵀA pass the driver knows the
+    error EXACTLY (Q orthonormal ⇒ ||A - Q·[B]_r||_F² = ||A||_F² -
+    Σ_{i<=r} σ_i(B)², with ||A||_F² accumulated during the sketch pass);
+    ``tol`` is that error relative to ||A||_F.  While the estimate exceeds
+    ``tol``, the sketch width doubles its oversampling (capped at
+    ``rank + max_oversample`` and min(m, n)): with
+    ``method="shgemm_fused"`` the new Omega columns are sketched on a
+    replay pass via ``SketchState.widen`` — work proportional to the
+    ADDED columns, and the grown state is bit-identical to a fresh sketch
+    at the final width (global-lattice Omega); legacy methods re-sketch at
+    the new width (jax.random draws are shape-dependent), equally
+    bit-identical to fresh, just not incremental.  Requires ``passes=2``
+    (each evaluation is one widen replay + one B replay, so a run that
+    widens k times streams the tiles 2 + 2k times) and a replayable
+    source.  ``return_info=True`` additionally returns an
+    :class:`AdaptiveInfo` with the widen/byte counters and the
+    estimate + Halko-bound histories.  Numerics: the estimate is exact in
+    exact arithmetic and monotone non-increasing in the width for the
+    fused lattice (nested sketch subspaces), but the f32 cancellation
+    ``||A||² - Σσ²`` floors it near sqrt(eps)·||A||_F ≈ 3.5e-4 relative —
+    a ``tol`` below that floor just widens to the cap.
     """
     from repro import stream  # deferred: stream imports this module's result
     if passes < 1:
         raise ValueError(f"passes must be >= 1, got {passes}")
+    if tol is not None:
+        tol = float(tol)
+        if tol <= 0.0:
+            raise ValueError(f"tol must be > 0, got {tol}")
+        if passes != 2:
+            raise ValueError(
+                f"adaptive mode (tol=) owns the pass schedule — it runs "
+                f"2 + 2*(widen rounds) passes — so passes must stay at its "
+                f"default 2, got passes={passes}")
+    if max_oversample is not None:
+        if tol is None:
+            raise ValueError("max_oversample only applies to adaptive "
+                             "(tol=...) runs")
+        max_oversample = int(max_oversample)
+        if max_oversample < 0:
+            raise ValueError(f"max_oversample must be >= 0, got "
+                             f"{max_oversample}")
+    if return_info and tol is None:
+        raise ValueError("return_info=True only applies to adaptive "
+                         "(tol=...) runs")
     shape = ((int(n_rows), int(n_cols))
              if n_rows is not None and n_cols is not None else None)
     try:
@@ -150,23 +233,38 @@ def rsvd_streamed(key: jax.Array, a_blocks, rank: int, *,
         if off != n_rows:
             raise ValueError(f"tiles cover {off} rows, expected {n_rows}")
 
-    p_hat = min(rank + oversample, min(n_rows, n_cols))
+    _check_rank(rank, n_rows, n_cols)
+    minmn = min(n_rows, n_cols)
+    p_cap = minmn
+    if max_oversample is not None:
+        p_cap = min(p_cap, rank + max_oversample)
+    p_hat = min(rank + oversample, p_cap if tol is not None else minmn)
     state = stream.init(key, n_cols, p_hat, max_rows=n_rows,
                         left=(passes == 1), method=method,
                         omega_dtype=omega_dtype)
+    fro2 = jnp.zeros((), jnp.float32)   # ||A||_F² for the posterior estimate
     for i, off, blk in tiles():
         state = stream.update(state, blk, off)
+        if tol is not None:
+            fro2 = fro2 + jnp.sum(jnp.square(blk.astype(jnp.float32)))
         if tile_callback is not None:
             tile_callback(i, off + blk.shape[0])
     if passes == 1:
         return stream.svd(state, rank)
 
     def accumulate_b(q):
-        b = jnp.zeros((p_hat, n_cols), jnp.float32)
+        b = jnp.zeros((q.shape[1], n_cols), jnp.float32)
         for _, off, blk in tiles():                    # B = Q^T A, tiled
             b = b + _dot(q[off:off + blk.shape[0]].T,
                          blk.astype(jnp.float32))
         return b
+
+    if tol is not None:
+        return _adaptive_rsvd(
+            stream, key, state, rank, tol=tol, p_cap=p_cap, fro2=fro2,
+            tiles=tiles, accumulate_b=accumulate_b, n_rows=n_rows,
+            n_cols=n_cols, method=method, omega_dtype=omega_dtype,
+            return_info=return_info)
 
     def accumulate_y(z):
         # tiles cover the rows in order, so Y = A·Z is the concatenation of
@@ -178,6 +276,68 @@ def rsvd_streamed(key: jax.Array, a_blocks, rank: int, *,
     return streamed_power_factor(stream.range_basis(state), rank, passes,
                                  accumulate_b=accumulate_b,
                                  accumulate_y=accumulate_y)
+
+
+def _adaptive_rsvd(stream, key, state, rank, *, tol, p_cap, fro2, tiles,
+                   accumulate_b, n_rows, n_cols, method, omega_dtype,
+                   return_info):
+    """Rank-revealing widening loop behind ``rsvd_streamed(tol=...)``
+    (DESIGN.md §13).  One B = QᵀA replay per evaluated width gives the
+    EXACT truncation error; while it exceeds ``tol`` the sketch doubles
+    its oversampling — incrementally (``SketchState.widen`` + replay over
+    only the new Omega columns) for the fused lattice, by re-sketching at
+    the new width for legacy jax.random streams.  Either way the working
+    state stays bit-identical to a fresh sketch at its width, so the
+    final factorization equals the non-adaptive two-pass run at the final
+    oversampling bit for bit."""
+    fro2 = jnp.maximum(fro2, jnp.float32(0))
+    est_hist, bound_hist = [], []
+    widen_passes = grown_cols = grown_bytes = full_bytes = 0
+    while True:
+        q = stream.range_basis(state)
+        b = accumulate_b(q)
+        u_b, sv, vt = jnp.linalg.svd(b, full_matrices=False)
+        head2 = jnp.sum(jnp.square(sv[:rank]))
+        denom = jnp.sqrt(jnp.maximum(fro2, jnp.float32(1e-30)))
+        est = float(jnp.sqrt(jnp.maximum(fro2 - head2, 0.0)) / denom)
+        est_hist.append(est)
+        s_now = state.p - rank
+        bound_hist.append(
+            float(halko_bound(jnp.linalg.norm(sv[rank:]), rank, s_now)
+                  / denom) if s_now >= 2 else None)
+        converged = est <= tol
+        if converged or state.p >= p_cap:
+            break
+        extra = min(state.p, p_cap - state.p)   # double the width, capped
+        p_new = state.p + extra
+        if method == "shgemm_fused":
+            # replay sketches ONLY the new lattice columns: O(extra) work
+            ext = state.widen(extra)
+            for _, off, blk in tiles():
+                ext = stream.update(ext, blk, off)
+            state = stream.hstack(state, ext)
+            grown_bytes += 4 * n_rows * extra
+        else:
+            # legacy jax.random Omega is a function of its full shape —
+            # a fresh draw at p_new shares no columns with the old one,
+            # so bit-identity to a fresh sketch demands a full re-sketch
+            state = stream.init(key, n_cols, p_new, max_rows=n_rows,
+                                method=method, omega_dtype=omega_dtype)
+            for _, off, blk in tiles():
+                state = stream.update(state, blk, off)
+            grown_bytes += 4 * n_rows * p_new
+        full_bytes += 4 * n_rows * p_new
+        grown_cols += extra
+        widen_passes += 1
+    u = _dot(q, u_b)
+    res = SVDResult(u[:, :rank], sv[:rank], vt[:rank, :])
+    if not return_info:
+        return res
+    return res, AdaptiveInfo(
+        final_p=state.p, widen_passes=widen_passes, converged=converged,
+        est_history=tuple(est_hist), bound_history=tuple(bound_hist),
+        grown_cols=grown_cols, grown_sketch_bytes=grown_bytes,
+        full_resketch_bytes=full_bytes)
 
 
 def streamed_power_factor(q: jax.Array, rank: int, passes: int, *,
@@ -228,6 +388,7 @@ def range_finder(key: jax.Array, a: jax.Array, rank: int, *, oversample: int = 1
                  omega_dtype=jnp.bfloat16) -> jax.Array:
     """Return Q with orthonormal columns s.t. A ~ Q Q^T A (Eq. 3)."""
     m, n = a.shape
+    _check_rank(rank, m, n)
     p_hat = min(rank + oversample, min(m, n))
     y = proj.sketch(key, a, p_hat, method=method, omega_dtype=omega_dtype)
     q, _ = jnp.linalg.qr(y)
@@ -249,7 +410,18 @@ def reconstruction_error(a: jax.Array, res: SVDResult) -> jax.Array:
 
 
 def halko_bound(s_tail_norm: jax.Array, rank: int, oversample: int) -> jax.Array:
-    """Expected-error bound Eq. (4): sqrt(1 + p/(s-1)) * ||Sigma_2||_F."""
+    """Expected-error bound Eq. (4): sqrt(1 + p/(s-1)) * ||Sigma_2||_F.
+
+    Domain: Eq. (4) (Halko et al. 2011, Thm. 10.5's expectation) averages
+    over s - 1 degrees of freedom, so it requires ``oversample >= 2``: at
+    s = 1 the prefactor divides by zero (the expectation genuinely
+    diverges) and below that the sqrt argument goes negative — both used
+    to leak inf/NaN into callers instead of failing."""
+    if oversample < 2:
+        raise ValueError(
+            f"halko_bound needs oversample >= 2 (Eq. 4's expectation runs "
+            f"over s-1 degrees of freedom and diverges at s=1; below that "
+            f"the sqrt argument is negative), got oversample={oversample}")
     return jnp.sqrt(1.0 + rank / (oversample - 1.0)) * s_tail_norm
 
 
@@ -266,6 +438,7 @@ def nystrom_eigh(key: jax.Array, a: jax.Array, rank: int, *,
       C = chol(Omega^T Y), B = Y C^-T, SVD(B) -> U, lam = sig^2 - nu.
     """
     n = a.shape[0]
+    _check_rank(rank, n, a.shape[1])
     p_hat = min(rank + oversample, n)
     # Nystrom reuses Omega downstream (shift + Gram), so it must exist in
     # HBM; with the fused method the hot GEMM still skips the Omega reads

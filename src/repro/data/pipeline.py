@@ -14,6 +14,7 @@ yields the identical stream — no iterator state to snapshot.
 from __future__ import annotations
 
 import dataclasses
+import json
 from pathlib import Path
 
 import numpy as np
@@ -88,11 +89,15 @@ def write_matrix_npy(path: str | Path, a, dtype=np.float32) -> Path:
 
 
 def write_matrix_shards(dirpath: str | Path, a, rows_per_shard: int,
-                        dtype=np.float32) -> list[Path]:
+                        dtype=np.float32, manifest: bool = True) -> list[Path]:
     """Write a matrix/tensor as a directory of axis-0 ``.npy`` row shards —
     the ``stream.DirectorySource`` / object-store layout (one blob per
     shard, sorted filename order == row order).  The last shard is ragged
-    when ``rows_per_shard`` does not divide the row count."""
+    when ``rows_per_shard`` does not divide the row count.
+
+    ``manifest=True`` (default) also writes the directory's
+    ``manifest.json`` (:func:`write_shard_manifest`) so object-store
+    consumers skip the per-shard header reads."""
     if rows_per_shard < 1:
         raise ValueError(f"rows_per_shard must be >= 1, got {rows_per_shard}")
     dirpath = Path(dirpath)
@@ -100,8 +105,10 @@ def write_matrix_shards(dirpath: str | Path, a, rows_per_shard: int,
     # clear ALL previous .npy files — DirectorySource globs *.npy, so a
     # stale shard (shorter rewrite), a mixed-width name, or a leftover
     # write_matrix_npy file would be silently concatenated as matrix rows
+    # — and any stale manifest, which would pin the OLD layout
     for old in dirpath.glob("*.npy"):
         old.unlink()
+    (dirpath / "manifest.json").unlink(missing_ok=True)
     a = np.asarray(a, dtype)
     n_shards = -(-a.shape[0] // rows_per_shard)
     # pad indices wide enough that lexicographic order (what
@@ -113,12 +120,77 @@ def write_matrix_shards(dirpath: str | Path, a, rows_per_shard: int,
         p = dirpath / f"shard_{i:0{width}d}.npy"
         np.save(p, a[off:off + rows_per_shard])
         paths.append(p)
+    if manifest:
+        write_shard_manifest(dirpath)
     return paths
 
 
-def matrix_tile_source(path: str | Path, tile_rows: int = 256):
+def _npy_layout(path: Path) -> tuple[tuple, bool, np.dtype, int]:
+    """(shape, fortran_order, dtype, data_offset) from a local ``.npy``
+    header — public numpy format API, no full load."""
+    with open(path, "rb") as f:
+        version = np.lib.format.read_magic(f)
+        if version == (1, 0):
+            shape, fortran, dtype = np.lib.format.read_array_header_1_0(f)
+        else:
+            shape, fortran, dtype = np.lib.format.read_array_header_2_0(f)
+        return shape, fortran, dtype, f.tell()
+
+
+def write_shard_manifest(dirpath: str | Path,
+                         pattern: str = "*.npy") -> Path:
+    """Scan a shard directory and write its ``manifest.json`` — per-shard
+    rows / dtype / byte ``data_offset`` in row order — the object-store
+    layout contract (``stream.ObjectStoreSource`` reads the manifest
+    instead of issuing per-shard header GETs against a high-latency
+    store)."""
+    from repro.stream.source import check_shard_name_order  # deferred
+    dirpath = Path(dirpath)
+    files = sorted(dirpath.glob(pattern))
+    if not files:
+        raise ValueError(f"no {pattern} shards in {dirpath}")
+    # the manifest BAKES row order — writing one from permuted unpadded
+    # names would smuggle the row-permutation bug past every reader guard
+    check_shard_name_order([f.name for f in files])
+    shards, rows, trailing = [], 0, None
+    for f in files:
+        shape, fortran, dtype, off = _npy_layout(f)
+        if fortran:
+            raise ValueError(f"{f}: fortran_order shards cannot be "
+                             f"range-read by row tiles; rewrite in C order")
+        if len(shape) < 2:
+            raise ValueError(f"{f}: tile sources need ndim >= 2 arrays, "
+                             f"got shape {shape}")
+        if trailing is None:
+            trailing = shape[1:]
+        elif shape[1:] != trailing:
+            raise ValueError(f"shard {f.name} has trailing shape "
+                             f"{shape[1:]}, expected {trailing}")
+        shards.append({"name": f.name, "rows": int(shape[0]),
+                       "trailing": [int(s) for s in shape[1:]],
+                       "dtype": dtype.str, "data_offset": int(off),
+                       "nbytes": f.stat().st_size})
+        rows += int(shape[0])
+    doc = {"format": "repro-shard-manifest", "version": 1,
+           "shape": [rows, *[int(s) for s in trailing]], "shards": shards}
+    mpath = dirpath / "manifest.json"
+    tmp = mpath.with_suffix(".json.tmp")
+    tmp.write_text(json.dumps(doc, indent=1))
+    tmp.replace(mpath)
+    return mpath
+
+
+def matrix_tile_source(path: str | Path, tile_rows: int = 256, *,
+                       range_reads: bool = False):
     """Open a ``write_matrix_npy`` file or ``write_matrix_shards`` directory
     as a replayable ``stream.TileSource`` (memmapped: resident set is one
-    tile, never the matrix)."""
+    tile, never the matrix).
+
+    ``range_reads=True`` opens the same layout through
+    ``stream.ObjectStoreSource`` (local byte-range reads, manifest-aware) —
+    the reference object-store backend, bit-identical tiles to the
+    memmapped path."""
     from repro import stream  # deferred: keep the data layer import-light
+    if range_reads:
+        return stream.ObjectStoreSource(Path(path), tile_rows=tile_rows)
     return stream.as_tile_source(Path(path), tile_rows=tile_rows)

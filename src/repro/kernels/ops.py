@@ -119,12 +119,16 @@ def shgemm_fused(a: jax.Array, key: jax.Array, n: int, *,
     lattice: the call consumes ``Omega(key)[row_offset:row_offset+k,
     col_offset:col_offset+n]`` of the one-shot random matrix without ever
     materializing or slicing it — the primitive behind repro.stream and the
-    per-shard Omega row-blocks in core/distributed.py.  Concrete int offsets
-    must be multiples of the resolved (bk, bn) so streamed accumulation
-    tiles the one-shot K-chunking exactly; traced offsets (scan carries)
-    are accepted unchecked.  NOTE: for ``dist="very_sparse"`` with a
-    nonzero row_offset, pass the global ``s`` explicitly (the default is
-    derived from this call's local k).
+    per-shard Omega row-blocks in core/distributed.py.  A concrete int
+    ``row_offset`` must be a multiple of the resolved ``bk`` so streamed
+    K-accumulation tiles the one-shot K-chunking exactly; ``col_offset``
+    is unconstrained (any value >= 0): the N-axis tiling never touches the
+    per-element summation order, and the lattice is element-pure, so the
+    call reproduces the one-shot columns bit for bit at any offset — the
+    property adaptive sketch widening (stream.SketchState.widen) relies
+    on.  Traced offsets (scan carries) are accepted unchecked.  NOTE: for
+    ``dist="very_sparse"`` with a nonzero row_offset, pass the global
+    ``s`` explicitly (the default is derived from this call's local k).
     """
     a = a.astype(jnp.float32)
     m, k = a.shape
@@ -142,7 +146,10 @@ def shgemm_fused(a: jax.Array, key: jax.Array, n: int, *,
                                    terms=terms, fused=True)
     bm, bn, bk = blocks
     _validate_offset("row_offset", row_offset, bk)
-    _validate_offset("col_offset", col_offset, bn)
+    # unit=1: only the >= 0 check — N-axis block boundaries never affect
+    # the K-summation order, so any column offset consumes exactly
+    # Omega[:, c0:c0+n] of the one-shot lattice (see docstring)
+    _validate_offset("col_offset", col_offset, 1)
     offsets = jnp.stack([jnp.asarray(row_offset, jnp.int32),
                          jnp.asarray(col_offset, jnp.int32)]).reshape(1, 2)
     n_pad = n + (-n) % bn

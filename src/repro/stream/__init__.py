@@ -9,7 +9,11 @@ overwritten rows, DESIGN.md §12).  Matrix finalizers: finalize.py
 tucker_init/update/merge and the ``tucker`` finalizer).  Tile IO:
 source.py (TileSource — array / memmap / directory / generator — with
 double-buffered async prefetch and the replayability contract multi-pass
-consumers rely on).
+consumers rely on) and objectstore.py (ObjectStoreSource — the same
+contract over byte-range reads: local-file ranges as the reference
+backend, HTTP Range for real stores, manifest.json for zero-header-read
+layouts).  Adaptive widening: SketchState.widen + hstack grow the sketch
+width over the global Omega lattice (DESIGN.md §13).
 
 Consumers: core/rsvd.py ``rsvd_streamed`` (out-of-core matrices, power
 iteration over replayable sources), core/distributed.py
@@ -19,14 +23,17 @@ optim/compression.py (gradient-sketch accumulation over microbatches),
 core/hosvd.py ``rp_sthosvd_streamed``.
 """
 
-from repro.stream.state import (SketchState, init, merge, merge_across_hosts,
-                                update, update_cols)
+from repro.stream.state import (SketchState, hstack, init, merge,
+                                merge_across_hosts, update, update_cols)
 from repro.stream.finalize import range_basis, svd
 from repro.stream.rolling import (RollingSketchState, rolling_finalize,
                                   rolling_init, rolling_update)
 from repro.stream.source import (ArraySource, DirectorySource,
                                  GeneratorSource, MemmapSource, TileSource,
-                                 as_tile_source, prefetch, source_tiles)
+                                 as_tile_source, check_shard_name_order,
+                                 prefetch, source_tiles)
+from repro.stream.objectstore import (FileRangeFetcher, HttpRangeFetcher,
+                                      ObjectStoreSource, read_npy_header)
 from repro.stream.tucker import (TuckerSketch, tucker, tucker_finalize,
                                  tucker_init, tucker_merge, tucker_update)
 
@@ -36,12 +43,14 @@ range = range_basis  # noqa: A001
 
 __all__ = [
     "SketchState", "init", "update", "update_cols", "merge",
-    "merge_across_hosts",
+    "merge_across_hosts", "hstack",
     "RollingSketchState", "rolling_init", "rolling_update",
     "rolling_finalize",
     "svd", "range", "range_basis",
     "TileSource", "ArraySource", "MemmapSource", "DirectorySource",
-    "GeneratorSource", "as_tile_source", "prefetch", "source_tiles",
+    "GeneratorSource", "ObjectStoreSource", "FileRangeFetcher",
+    "HttpRangeFetcher", "read_npy_header", "check_shard_name_order",
+    "as_tile_source", "prefetch", "source_tiles",
     "TuckerSketch", "tucker", "tucker_finalize", "tucker_init",
     "tucker_merge", "tucker_update",
 ]

@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import math
 import queue
+import re
 import threading
 from pathlib import Path
 from typing import Callable, Iterable, Iterator, Optional, Sequence, Union
@@ -47,6 +48,37 @@ __all__ = [
 ]
 
 DEFAULT_TILE_ROWS = 256
+
+_NUM_SUFFIX = re.compile(r"^(.*?)(\d+)$")
+
+
+def check_shard_name_order(names: Sequence[str]) -> None:
+    """Guard against lexicographic-vs-numeric shard permutation.
+
+    Shard order IS row order, and directory listings sort
+    lexicographically — so externally produced UNPADDED numeric names
+    (``shard_2.npy`` sorting after ``shard_10.npy``) silently permute the
+    matrix's rows.  For a set of names that all follow the
+    ``<prefix><digits>`` convention, any same-prefix adjacent pair whose
+    numeric order disagrees with the given (lexicographic) order raises a
+    loud ValueError naming the pair.  ``write_matrix_shards`` output is
+    zero-padded and unaffected; mixed non-numeric name sets are left
+    alone (no convention to check)."""
+    parsed = []
+    for name in names:
+        m = _NUM_SUFFIX.match(Path(name).stem)
+        if m is None:
+            continue  # non-numeric name: no convention to check for IT —
+            # but keep validating the numeric ones around it
+        parsed.append((m.group(1), int(m.group(2)), name))
+    for (pre1, num1, name1), (pre2, num2, name2) in zip(parsed, parsed[1:]):
+        if pre1 == pre2 and num1 > num2:
+            raise ValueError(
+                f"shard filenames sort lexicographically but their numeric "
+                f"suffixes disagree: {name1!r} sorts before {name2!r} yet "
+                f"{num1} > {num2} — tiles would silently permute matrix "
+                f"rows.  Zero-pad the indices (as write_matrix_shards "
+                f"does) or pass the shards as an explicit ordered list")
 
 
 class TileSource:
@@ -154,6 +186,7 @@ class DirectorySource(TileSource):
         self.files = sorted(self.path.glob(pattern))
         if not self.files:
             raise ValueError(f"no {pattern} shards in {self.path}")
+        check_shard_name_order([f.name for f in self.files])
         rows, trailing = 0, None
         for f in self.files:
             hdr = np.load(f, mmap_mode="r")
@@ -223,6 +256,10 @@ def as_tile_source(obj, *, tile_rows: int = DEFAULT_TILE_ROWS,
 
       TileSource            -> itself (tile_rows/shape ignored)
       array (ndim >= 2)     -> ArraySource
+      http(s) URL           -> ObjectStoreSource (ranged GETs; a prefix
+                               URL resolves <prefix>/manifest.json)
+      str/Path to manifest.json / *.json -> ObjectStoreSource (byte-range
+                               reads over the manifest's shards)
       str/Path to a file    -> MemmapSource  (.npy)
       str/Path to a dir     -> DirectorySource
       callable              -> GeneratorSource (replayable; needs ``shape``)
@@ -236,6 +273,11 @@ def as_tile_source(obj, *, tile_rows: int = DEFAULT_TILE_ROWS,
     if isinstance(obj, TileSource):
         return obj
     if isinstance(obj, (str, Path)):
+        s = str(obj)
+        if s.startswith(("http://", "https://")) or s.endswith(".json"):
+            # deferred: objectstore imports this module for TileSource
+            from repro.stream.objectstore import ObjectStoreSource
+            return ObjectStoreSource(obj, tile_rows)
         p = Path(obj)
         return (DirectorySource(p, tile_rows) if p.is_dir()
                 else MemmapSource(p, tile_rows))

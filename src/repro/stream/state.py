@@ -69,6 +69,9 @@ class SketchState:
                                   default="gaussian")
     omega_dtype: str = dataclasses.field(metadata={"static": True},
                                          default="bfloat16")
+    # Omega column-lattice offset of this state's FIRST column: 0 for
+    # ordinary states, p_old for a widening extension (DESIGN.md §13).
+    col_base: int = dataclasses.field(metadata={"static": True}, default=0)
 
     @property
     def max_rows(self) -> int:
@@ -78,11 +81,60 @@ class SketchState:
     def odtype(self):
         return jnp.dtype(self.omega_dtype)
 
+    def widen(self, extra_cols: int) -> "SketchState":
+        """Extension state for growing the sketch width by ``extra_cols``
+        columns of the SAME global Omega lattice (adaptive rank-revealing
+        refinement, DESIGN.md §13).
+
+        Returns a fresh zero state of width ``extra_cols`` whose Omega
+        columns start at ``col_base + p``.  Replay the SAME tiles through
+        ``update`` — the fused kernel hashes only the NEW lattice columns,
+        so the replay's sketch work is proportional to the added columns,
+        not the full width — then ``hstack`` the extension onto this
+        state.  The grown state is bit-identical to a fresh sketch at the
+        final width: every Omega element is a pure function of the global
+        (row, col) index, and the K-chunking (the only thing that touches
+        f32 summation order) depends on n_cols alone, never on the sketch
+        width.
+
+        Only ``method="shgemm_fused"`` states can widen.  Legacy
+        jax.random streams draw Omega as a function of its full shape —
+        Omega(key, (n, p+e)) shares no columns with Omega(key, (n, p)) —
+        so for those methods re-init at the new width and re-sketch
+        (core.rsvd's adaptive driver does exactly that).
+        """
+        extra = int(extra_cols)
+        if extra < 1:
+            raise ValueError(f"extra_cols must be >= 1, got {extra_cols}")
+        if self.method != "shgemm_fused":
+            raise ValueError(
+                f"widen needs method='shgemm_fused' (got {self.method!r}): "
+                "legacy jax.random Omega draws depend on the full matrix "
+                "shape, so a width-p sketch shares no columns with a "
+                "width-(p+e) one — re-init at the new width and re-sketch "
+                "instead")
+        if self.w is not None:
+            raise ValueError(
+                "cannot widen a left-sketching state: the Psi width l is "
+                "sized from p at init — rebuild with init(left=True) at "
+                "the final width (the two-pass adaptive driver never "
+                "needs W)")
+        top = self.col_base + self.p + extra
+        if top > self.n_cols:
+            raise ValueError(
+                f"widening to total sketch width {top} exceeds "
+                f"n_cols={self.n_cols}")
+        return dataclasses.replace(
+            self, y=jnp.zeros((self.max_rows, extra), jnp.float32),
+            rows_seen=jnp.zeros((), jnp.int32),
+            p=extra, col_base=self.col_base + self.p)
+
 
 jax.tree_util.register_dataclass(
     SketchState,
     data_fields=("y", "w", "key_omega", "key_psi", "rows_seen"),
-    meta_fields=("n_cols", "p", "l", "method", "dist", "omega_dtype"),
+    meta_fields=("n_cols", "p", "l", "method", "dist", "omega_dtype",
+                 "col_base"),
 )
 
 
@@ -155,7 +207,7 @@ def _sketch_rows(state: SketchState, a_block: jax.Array) -> jax.Array:
                                         state.n_cols)
         return ops.shgemm_fused(a_block, state.key_omega, state.p,
                                 dist=state.dist, omega_dtype=state.odtype,
-                                blocks=blocks)
+                                blocks=blocks, col_offset=state.col_base)
     return proj.sketch(_typed_key(state.key_omega), a_block, state.p,
                        method=state.method, dist=state.dist,
                        omega_dtype=state.odtype)
@@ -275,8 +327,10 @@ def update_cols(state: SketchState, a_block: jax.Array, row_offset,
              if state.dist == "very_sparse" else None)
         y_inc = ops.shgemm_fused(a_block, state.key_omega, state.p,
                                  dist=state.dist, omega_dtype=state.odtype,
-                                 blocks=blocks, s=s, row_offset=c0)
+                                 blocks=blocks, s=s, row_offset=c0,
+                                 col_offset=state.col_base)
     else:
+        # non-fused states always have col_base == 0 (widen() refuses them)
         omega = _materialize_omega(state)
         om_blk = jax.lax.dynamic_slice(omega, (c0, jnp.int32(0)),
                                        (bc, state.p))
@@ -320,7 +374,7 @@ def _meta_mismatch(s1: SketchState, s2: SketchState) -> str | None:
     traced arrays, so a mismatched pair fails with the differing field named
     instead of a downstream broadcast/Pallas shape error."""
     for f in ("n_cols", "p", "l", "method", "dist", "omega_dtype",
-              "max_rows"):
+              "col_base", "max_rows"):
         if getattr(s1, f) != getattr(s2, f):
             return f
     return None
@@ -362,6 +416,47 @@ def merge(s1: SketchState, s2: SketchState) -> SketchState:
     return dataclasses.replace(
         s1, y=s1.y + s2.y, w=w,
         rows_seen=jnp.maximum(s1.rows_seen, s2.rows_seen))
+
+
+def hstack(base: SketchState, ext: SketchState) -> SketchState:
+    """Concatenate a widening extension onto its base state — the second
+    half of ``SketchState.widen`` (DESIGN.md §13).
+
+    ``ext`` must be ``base.widen(extra)`` replayed over the SAME tiles:
+    its Omega columns start exactly where ``base``'s end, so the result's
+    Y is column-for-column the fresh sketch at the grown width (the fused
+    lattice is a pure function of global indices and the K-chunking
+    depends only on n_cols — DESIGN.md §10/§13)."""
+    for f in ("n_cols", "l", "method", "dist", "omega_dtype", "max_rows"):
+        if getattr(base, f) != getattr(ext, f):
+            raise ValueError(
+                f"cannot hstack sketch states: {f} differs "
+                f"({getattr(base, f)!r} vs {getattr(ext, f)!r})")
+    if ext.col_base != base.col_base + base.p:
+        raise ValueError(
+            f"extension's Omega columns start at lattice offset "
+            f"{ext.col_base}, but the base state ends at "
+            f"{base.col_base + base.p} — hstack needs a contiguous "
+            f"extension (build it with base.widen(extra_cols))")
+    if _concretely_differ(base.key_omega, ext.key_omega):
+        raise ValueError("cannot hstack sketch states drawn from different "
+                         "Omega keys — the columns live on different "
+                         "random lattices")
+    if base.w is not None or ext.w is not None:
+        raise ValueError("cannot hstack left-sketching states (widen() "
+                         "refuses to create them)")
+    if _concretely_differ(base.rows_seen, ext.rows_seen):
+        raise ValueError(
+            f"extension's streamed-row high-water mark is {ext.rows_seen} "
+            f"but the base state's is {base.rows_seen} — the widen replay "
+            f"must re-stream the tiles the base saw, or the new columns "
+            f"describe a different matrix.  (This check compares "
+            f"high-water marks only; full-coverage accounting is the "
+            f"replaying driver's job, cf. rsvd_streamed's tile counter)")
+    return dataclasses.replace(
+        base, y=jnp.concatenate([base.y, ext.y], axis=1),
+        p=base.p + ext.p,
+        rows_seen=jnp.maximum(base.rows_seen, ext.rows_seen))
 
 
 def merge_across_hosts(state: SketchState, axis_name: str, *,

@@ -1,0 +1,253 @@
+"""Adaptive rank-revealing streamed rSVD (DESIGN.md §13) + the ISSUE 5
+bugfix regressions.
+
+Pins: SketchState.widen/hstack grow the sketch over the global Omega
+lattice bit-identically to a fresh sketch at the final width (state level
+for the fused lattice, driver level for EVERY projection method — legacy
+methods re-sketch), widen work scales with the added columns (byte
+counters), `tol`-driven widening respects `max_oversample` and produces
+monotone non-increasing error estimates, and the three bugfixes:
+halko_bound's oversample >= 2 domain (was inf/NaN), rank > min(m, n)
+raising in rsvd/range_finder/nystrom_eigh (was a silent under-ranked
+return), and the DirectorySource numeric-suffix order guard (covered in
+tests/test_stream_source.py)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import stream
+from repro.core import hosvd, rsvd
+from repro.core import projection as proj
+
+jax.config.update("jax_platform_name", "cpu")
+
+KEY = jax.random.PRNGKey(42)
+ALL_METHODS = ["f32", "lowp_single", "shgemm", "shgemm3", "shgemm_pallas",
+               "shgemm_fused"]
+
+M, N, TILE, RANK = 96, 112, 28, 6
+
+
+@pytest.fixture(scope="module")
+def matrix():
+    return np.asarray(jax.random.normal(jax.random.PRNGKey(1), (M, N),
+                                        jnp.float32))
+
+
+def _drain(st, a, tile=TILE):
+    off = 0
+    for i in range(0, a.shape[0], tile):
+        blk = a[i:i + tile]
+        st = stream.update(st, blk, off)
+        off += blk.shape[0]
+    return st
+
+
+# ---------------------------------------------------------------------------
+# Bugfix regressions
+# ---------------------------------------------------------------------------
+
+def test_halko_bound_domain():
+    """Regression: oversample=1 used to return inf and oversample=0 NaN
+    (sqrt of a negative) — both now raise; the valid domain is finite."""
+    tail = jnp.float32(0.5)
+    for bad in (1, 0, -3):
+        with pytest.raises(ValueError, match="oversample >= 2"):
+            rsvd.halko_bound(tail, 8, bad)
+    val = float(rsvd.halko_bound(tail, 8, 2))
+    assert np.isfinite(val) and val == pytest.approx(0.5 * 3.0)
+    assert np.isfinite(float(rsvd.halko_bound(tail, 8, 10)))
+
+
+def test_rank_validation_raises_instead_of_underranked(matrix):
+    """Regression: rank > min(m, n) used to be absorbed by the p-clamp and
+    sliced as u[:, :rank] — silently returning fewer than rank columns."""
+    a = jnp.asarray(matrix)               # 96 x 112, min = 96
+    with pytest.raises(ValueError, match="1 <= rank <= min"):
+        rsvd.rsvd(KEY, a, 97)
+    with pytest.raises(ValueError, match="1 <= rank <= min"):
+        rsvd.range_finder(KEY, a, 100)
+    with pytest.raises(ValueError, match="1 <= rank <= min"):
+        rsvd.rsvd(KEY, a, 0)
+    psd = jnp.eye(32) + 0.1 * jnp.ones((32, 32))
+    with pytest.raises(ValueError, match="1 <= rank <= min"):
+        rsvd.nystrom_eigh(KEY, psd, 33)
+    with pytest.raises(ValueError, match="1 <= rank <= min"):
+        rsvd.rsvd_streamed(KEY, stream.ArraySource(matrix, TILE), 97)
+    # boundary stays valid and full-rank
+    res = rsvd.rsvd(KEY, a[:16, :12], 12, oversample=2)
+    assert res.u.shape == (16, 12) and res.s.shape == (12,)
+
+
+# ---------------------------------------------------------------------------
+# widen / hstack state algebra
+# ---------------------------------------------------------------------------
+
+def test_widen_hstack_bit_identical_to_fresh(matrix):
+    """The grown fused state == one-shot sketch at the final width, bit for
+    bit — including chained widens (the lattice is global, the K-chunking
+    width-independent)."""
+    p0, e1, e2 = 10, 7, 5
+    base = _drain(stream.init(KEY, N, p0, max_rows=M,
+                              method="shgemm_fused"), matrix)
+    grown = stream.hstack(base, _drain(base.widen(e1), matrix))
+    np.testing.assert_array_equal(
+        np.asarray(grown.y),
+        np.asarray(proj.sketch(KEY, jnp.asarray(matrix), p0 + e1,
+                               method="shgemm_fused")))
+    grown2 = stream.hstack(grown, _drain(grown.widen(e2), matrix))
+    np.testing.assert_array_equal(
+        np.asarray(grown2.y),
+        np.asarray(proj.sketch(KEY, jnp.asarray(matrix), p0 + e1 + e2,
+                               method="shgemm_fused")))
+    assert grown2.p == p0 + e1 + e2 and grown2.col_base == 0
+
+
+def test_widen_and_hstack_validation(matrix):
+    base = _drain(stream.init(KEY, N, 10, max_rows=M,
+                              method="shgemm_fused"), matrix)
+    with pytest.raises(ValueError, match="extra_cols"):
+        base.widen(0)
+    with pytest.raises(ValueError, match="exceeds"):
+        base.widen(N)                       # 10 + 112 > n_cols
+    legacy = stream.init(KEY, N, 10, max_rows=M, method="shgemm")
+    with pytest.raises(ValueError, match="shgemm_fused"):
+        legacy.widen(4)
+    left = stream.init(KEY, N, 10, max_rows=M, left=True,
+                       method="shgemm_fused")
+    with pytest.raises(ValueError, match="left-sketching"):
+        left.widen(4)
+    # hstack: non-contiguous extension / wrong key / row-coverage drift
+    ext = _drain(base.widen(4), matrix)
+    with pytest.raises(ValueError, match="contiguous"):
+        stream.hstack(base, _drain(base.widen(4), matrix).widen(2))
+    other = _drain(
+        stream.init(jax.random.PRNGKey(7), N, 10, max_rows=M,
+                    method="shgemm_fused"), matrix)
+    with pytest.raises(ValueError, match="Omega keys"):
+        stream.hstack(other, ext)
+    short = base.widen(4)
+    short = stream.update(short, matrix[:TILE], 0)   # only one tile
+    with pytest.raises(ValueError, match="replay"):
+        stream.hstack(base, short)
+    # a valid hstack still works after the failed attempts
+    assert stream.hstack(base, ext).p == 14
+
+
+# ---------------------------------------------------------------------------
+# Adaptive driver
+# ---------------------------------------------------------------------------
+
+def _decaying(n=160, rank=RANK, s_p=1e-3):
+    return rsvd.matrix_with_singular_values(
+        KEY, n, rsvd.singular_values_exp(n, rank, s_p))
+
+
+@pytest.mark.parametrize("method", ALL_METHODS)
+def test_adaptive_matches_fresh_bitwise_every_method(method):
+    """Acceptance criterion: the adaptive run's final factorization is
+    bit-identical to the one-shot (non-adaptive) run at the final width —
+    for EVERY projection method.  tol below the f32 floor forces widening
+    all the way to the max_oversample cap, deterministically."""
+    a = np.asarray(_decaying())
+    src = stream.ArraySource(a, 48)
+    res, info = rsvd.rsvd_streamed(KEY, src, RANK, oversample=2, tol=1e-9,
+                                   max_oversample=8, return_info=True,
+                                   method=method)
+    assert info.final_p == RANK + 8 and info.widen_passes >= 1
+    assert not info.converged
+    fresh = rsvd.rsvd_streamed(KEY, src, RANK, oversample=8, method=method)
+    for field, got, want in zip(res._fields, res, fresh):
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(want),
+            err_msg=f"method={method} field={field}")
+
+
+def test_adaptive_counters_and_monotone_estimates():
+    """Fused widening sketches only the new columns (grown bytes strictly
+    below a full re-sketch), the Halko diagnostic stays finite wherever
+    oversample >= 2, and the estimates are monotone non-increasing (nested
+    sketch subspaces) up to the f32 cancellation floor."""
+    a = _decaying()
+    src = stream.ArraySource(np.asarray(a), 48)
+    res, info = rsvd.rsvd_streamed(KEY, src, RANK, oversample=2, tol=1e-9,
+                                   max_oversample=24, return_info=True)
+    assert info.widen_passes >= 2
+    assert info.grown_sketch_bytes < info.full_resketch_bytes
+    assert info.grown_cols == info.final_p - (RANK + 2)
+    ests = info.est_history
+    assert len(ests) == info.widen_passes + 1
+    assert all(b <= a_ + 5e-4 for a_, b in zip(ests, ests[1:])), ests
+    assert all(b is None or np.isfinite(b) for b in info.bound_history)
+    # oversample >= 2 from the first evaluated width here, so diagnostics
+    # are present throughout — the halko_bound domain fix in action
+    assert all(b is not None for b in info.bound_history)
+    # the factorization itself is still a valid rank-RANK rSVD
+    err = float(rsvd.reconstruction_error(a, res))
+    assert err < 5e-3, err
+
+
+def test_adaptive_converges_early_without_widening():
+    """A tol the starting width already meets runs plain two-pass: no
+    widen replays, zero grown bytes, converged=True."""
+    a = _decaying()
+    src = stream.ArraySource(np.asarray(a), 48)
+    res, info = rsvd.rsvd_streamed(KEY, src, RANK, tol=0.5,
+                                   max_oversample=32, return_info=True)
+    assert info.widen_passes == 0 and info.converged
+    assert info.grown_sketch_bytes == 0
+    ref = rsvd.rsvd_streamed(KEY, src, RANK)
+    for field, got, want in zip(res._fields, res, ref):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=field)
+
+
+def test_adaptive_validation(matrix):
+    src = stream.ArraySource(matrix, TILE)
+    with pytest.raises(ValueError, match="tol must be > 0"):
+        rsvd.rsvd_streamed(KEY, src, RANK, tol=0.0)
+    with pytest.raises(ValueError, match="passes"):
+        rsvd.rsvd_streamed(KEY, src, RANK, tol=0.1, passes=3)
+    with pytest.raises(ValueError, match="max_oversample"):
+        rsvd.rsvd_streamed(KEY, src, RANK, max_oversample=8)
+    with pytest.raises(ValueError, match="return_info"):
+        rsvd.rsvd_streamed(KEY, src, RANK, return_info=True)
+    with pytest.raises(ValueError, match="max_oversample must be >= 0"):
+        rsvd.rsvd_streamed(KEY, src, RANK, tol=0.1, max_oversample=-1)
+    # adaptive needs replayable tiles, checked before any streaming
+    gen = (matrix[i:i + TILE] for i in range(0, M, TILE))
+    with pytest.raises(ValueError, match="replay"):
+        rsvd.rsvd_streamed(KEY, gen, RANK, n_rows=M, n_cols=N, tol=0.1)
+
+
+# ---------------------------------------------------------------------------
+# Streaming Tucker: per-mode adaptive ranks
+# ---------------------------------------------------------------------------
+
+def test_sthosvd_adaptive_ranks_reveal_true_rank():
+    """tol=+max_ranks= picks per-mode ranks at finalize: on a low-
+    multilinear-rank tensor the revealed ranks land at (or below) the
+    ceilings and the reconstruction meets the budget."""
+    dims, gen_ranks = (40, 30, 20), (6, 5, 4)   # true ranks J_i - 2
+    t = hosvd.make_test_tensor(jax.random.PRNGKey(12), dims, gen_ranks)
+    res = hosvd.rp_sthosvd_streamed(
+        KEY, stream.ArraySource(np.asarray(t), 10), tol=1e-3,
+        max_ranks=(12, 12, 12))
+    got = tuple(f.shape[1] for f in res.factors)
+    assert got == res.core.shape
+    assert all(r <= 12 for r in got)
+    assert all(r <= g for r, g in zip(got, gen_ranks))  # rank revealed
+    assert float(hosvd.reconstruction_error(t, res)) < 5e-2
+    with pytest.raises(ValueError, match="either fixed ranks"):
+        hosvd.rp_sthosvd_streamed(KEY, stream.ArraySource(np.asarray(t), 10),
+                                  ranks=(8, 8, 8), tol=1e-3,
+                                  max_ranks=(9, 9, 9))
+    with pytest.raises(ValueError, match="needs max_ranks"):
+        hosvd.rp_sthosvd_streamed(KEY, stream.ArraySource(np.asarray(t), 10),
+                                  tol=1e-3)
+    with pytest.raises(ValueError, match="max_ranks only"):
+        hosvd.rp_sthosvd_streamed(KEY, stream.ArraySource(np.asarray(t), 10),
+                                  ranks=(8, 8, 8), max_ranks=(9, 9, 9))

@@ -292,8 +292,16 @@ def test_fused_offset_validation_and_traced_offsets():
     blocks = (32, 128, 128)
     with pytest.raises(ValueError, match="row_offset=64"):
         ops.shgemm_fused(a, KEY, 48, row_offset=64, blocks=blocks)
-    with pytest.raises(ValueError, match="col_offset=7"):
-        ops.shgemm_fused(a, KEY, 48, col_offset=7, blocks=blocks)
+    # col_offset carries NO alignment constraint (the N-axis tiling never
+    # touches K-summation order): an arbitrary offset consumes exactly the
+    # offset columns of the one-shot lattice — the widening primitive
+    om = proj.fused_omega(KEY, (256, 64), dtype=jnp.bfloat16)
+    y7 = ops.shgemm_fused(a, KEY, 48, col_offset=7, blocks=blocks)
+    np.testing.assert_array_equal(
+        np.asarray(y7), np.asarray(ops.shgemm(a, om[:, 7:55],
+                                              blocks=blocks)))
+    with pytest.raises(ValueError, match=">= 0"):
+        ops.shgemm_fused(a, KEY, 48, col_offset=-1, blocks=blocks)
     with pytest.raises(ValueError, match=">= 0"):
         ops.shgemm_fused(a, KEY, 48, row_offset=-128, blocks=blocks)
     # traced offsets (scan carries) go through the SMEM path unchecked

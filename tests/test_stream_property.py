@@ -157,3 +157,36 @@ def test_rolling_finalize_obeys_merge_invariance(total, split):
     np.testing.assert_array_equal(np.asarray(fin.y), np.asarray(merged.y))
     swapped = stream.merge(s2, s1)
     np.testing.assert_array_equal(np.asarray(fin.y), np.asarray(swapped.y))
+
+
+@settings(max_examples=8, deadline=None, derandomize=True)
+@given(max_os=st.sampled_from([2, 6, 14]),
+       tol=st.sampled_from([1e-8, 2e-3, 0.05, 0.4]),
+       tile=st.sampled_from([16, 24]))
+def test_adaptive_widening_bounded_and_monotone(max_os, tol, tile):
+    """Adaptive rsvd_streamed (DESIGN.md §13): tol-driven widening never
+    exceeds the max_oversample cap (nor min(m, n)), the error estimates
+    are monotone non-increasing in the sketch width (nested fused-lattice
+    subspaces; slack for the f32 cancellation floor), a converged run's
+    last estimate is under tol, and the result always equals the
+    non-adaptive run at the final width bit for bit."""
+    rank = 4
+    res, info = rsvd.rsvd_streamed(
+        KEY, stream.ArraySource(_A, tile), rank, oversample=2, tol=tol,
+        max_oversample=max_os, return_info=True)
+    cap = min(rank + max_os, min(M, N))
+    assert rank + 2 <= info.final_p <= cap
+    assert info.widen_passes == len(info.est_history) - 1
+    ests = info.est_history
+    assert all(b <= a + 5e-4 for a, b in zip(ests, ests[1:])), ests
+    if info.converged:
+        assert ests[-1] <= tol
+    else:
+        assert info.final_p == cap
+    if info.widen_passes:
+        assert info.grown_sketch_bytes < info.full_resketch_bytes
+    fresh = rsvd.rsvd_streamed(KEY, stream.ArraySource(_A, tile), rank,
+                               oversample=info.final_p - rank)
+    for field, got, want in zip(res._fields, res, fresh):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=field)

@@ -1,17 +1,23 @@
-"""Tile-source conformance suite (repro.stream.source, DESIGN.md §11).
+"""Tile-source conformance suite (repro.stream.source, DESIGN.md §11/§13).
 
 Pins the contract the out-of-core drivers rely on: every ``TileSource``
 kind — in-memory array, memmapped ``.npy``, directory-of-``.npy`` shards,
-generator — yields a bit-identical ``SketchState`` and a bit-identical
-``rsvd_streamed`` result to the in-memory one-shot path, for every
-projection method including ``shgemm_fused``, across ragged final tiles
-and tile sizes that do not divide the row count.  Also: prefetch
-semantics (ordering, exception propagation, early close), source
-coercion/validation, streamed power iteration vs in-core power-iterated
-``rsvd`` on the paper's §3.3 matrices (the acceptance criterion), and the
-memmapped streaming-Tucker path.
+object-store shards behind byte-range reads, generator — yields a
+bit-identical ``SketchState`` and a bit-identical ``rsvd_streamed``
+result to the in-memory one-shot path, for every projection method
+including ``shgemm_fused``, across ragged final tiles and tile sizes that
+do not divide the row count.  Also: prefetch semantics (ordering,
+exception propagation, early close), source coercion/validation
+(manifest.json and http(s) URLs included), the HTTP Range backend against
+a live threaded server (and the loud failure on a server that ignores
+Range), the numeric-suffix shard-order permutation guard, streamed power
+iteration vs in-core power-iterated ``rsvd`` on the paper's §3.3 matrices
+(the acceptance criterion), and the memmapped streaming-Tucker path.
 """
 
+import functools
+import http.server
+import os
 import threading
 import time
 
@@ -50,17 +56,19 @@ def disk(tmp_path_factory, matrix):
     shards = td / "shards"
     paths = pipeline.write_matrix_shards(shards, matrix, SHARD)
     assert len(paths) == 2 and paths[0].name < paths[1].name
+    assert (shards / "manifest.json").is_file()  # object-store layout
     return {"npy": npy, "dir": shards}
 
 
 def _kinds(matrix, disk, tile=TILE):
-    """One source of each kind, all tiling the same matrix with the same
-    (ragged) tile boundaries."""
+    """One source of each kind (5 total), all tiling the same matrix with
+    the same (ragged) tile boundaries."""
     m = matrix.shape[0]
     return {
         "array": stream.ArraySource(matrix, tile),
         "memmap": stream.MemmapSource(disk["npy"], tile),
         "directory": stream.DirectorySource(disk["dir"], tile),
+        "objectstore": stream.ObjectStoreSource(disk["dir"], tile),
         "generator": stream.GeneratorSource(
             lambda: (matrix[i:i + tile] for i in range(0, m, tile)),
             matrix.shape),
@@ -330,6 +338,184 @@ def test_rsvd_streamed_shape_crosschecks(matrix):
                                    (M, N))
     with pytest.raises(ValueError, match="cover"):
         rsvd.rsvd_streamed(KEY, short, RANK)
+
+
+# ---------------------------------------------------------------------------
+# Object-store source (byte-range reads, DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def test_objectstore_without_manifest_parses_headers(matrix, disk, tmp_path):
+    """The header-parse path (no manifest: two ranged reads per shard)
+    yields the same bits as the manifest path and as the one-shot sketch."""
+    pipeline.write_matrix_shards(tmp_path, matrix, SHARD, manifest=False)
+    assert not (tmp_path / "manifest.json").exists()
+    src = stream.ObjectStoreSource(tmp_path, TILE)
+    assert src.shape == (M, N) and src.replayable
+    st = _drain(src, "shgemm_fused")
+    ref = _drain(stream.ObjectStoreSource(disk["dir"], TILE), "shgemm_fused")
+    np.testing.assert_array_equal(np.asarray(st.y), np.asarray(ref.y))
+    # single-.npy object and explicit url list work too
+    st1 = _drain(stream.ObjectStoreSource(str(disk["npy"]), TILE),
+                 "shgemm_fused")
+    np.testing.assert_array_equal(np.asarray(st1.y), np.asarray(ref.y))
+    files = sorted(str(p) for p in tmp_path.glob("*.npy"))
+    st2 = _drain(stream.ObjectStoreSource(files, TILE), "shgemm_fused")
+    np.testing.assert_array_equal(np.asarray(st2.y), np.asarray(ref.y))
+
+
+def test_objectstore_coercions_and_range_reads(matrix, disk):
+    src = stream.as_tile_source(disk["dir"] / "manifest.json",
+                                tile_rows=TILE)
+    assert isinstance(src, stream.ObjectStoreSource)
+    src2 = pipeline.matrix_tile_source(disk["dir"], tile_rows=TILE,
+                                       range_reads=True)
+    assert isinstance(src2, stream.ObjectStoreSource)
+    res = rsvd.rsvd_streamed(KEY, src2, RANK)
+    ref = rsvd.rsvd_streamed(KEY, stream.DirectorySource(disk["dir"], TILE),
+                             RANK)
+    for field, got, want in zip(res._fields, res, ref):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=field)
+
+
+def test_numeric_suffix_order_guard(tmp_path, matrix):
+    """Regression: externally produced unpadded shard names (shard_2 after
+    shard_10 lexicographically) used to silently permute matrix rows; now
+    both directory-backed sources raise naming the offending pair."""
+    np.save(tmp_path / "shard_2.npy", matrix[:16])
+    np.save(tmp_path / "shard_10.npy", matrix[16:32])
+    for cls in (stream.DirectorySource, stream.ObjectStoreSource):
+        with pytest.raises(ValueError,
+                           match=r"shard_10.*shard_2|shard_2.*shard_10"):
+            cls(tmp_path, TILE)
+    # the manifest WRITER must refuse too — a baked manifest would smuggle
+    # the permuted row order past every reader-side guard
+    with pytest.raises(ValueError,
+                       match=r"shard_10.*shard_2|shard_2.*shard_10"):
+        pipeline.write_shard_manifest(tmp_path)
+    # one non-numeric bystander file must NOT disable the guard
+    np.save(tmp_path / "mean.npy", matrix[:4])
+    with pytest.raises(ValueError,
+                       match=r"shard_10.*shard_2|shard_2.*shard_10"):
+        stream.DirectorySource(tmp_path, TILE)
+    # padded names (write_matrix_shards) and non-numeric sets stay fine
+    stream.check_shard_name_order(["shard_00000.npy", "shard_00001.npy"])
+    stream.check_shard_name_order(["alpha.npy", "beta.npy"])
+
+
+def test_objectstore_empty_shard_sets_raise(tmp_path):
+    with pytest.raises(ValueError, match="at least one"):
+        stream.ObjectStoreSource([], TILE)
+    (tmp_path / "manifest.json").write_text(
+        '{"format": "repro-shard-manifest", "version": 1, "shards": []}')
+    with pytest.raises(ValueError, match="at least one"):
+        stream.ObjectStoreSource(tmp_path, TILE)
+
+
+def test_objectstore_rejects_fortran_order(tmp_path, matrix):
+    np.save(tmp_path / "shard_0.npy", np.asfortranarray(matrix[:16]))
+    with pytest.raises(ValueError, match="fortran"):
+        stream.ObjectStoreSource(tmp_path, TILE)
+    with pytest.raises(ValueError, match="fortran"):
+        pipeline.write_shard_manifest(tmp_path)
+
+
+class _RangeHandler(http.server.SimpleHTTPRequestHandler):
+    """Minimal object-store stand-in: ranged GETs (206) + HEAD sizes."""
+
+    def log_message(self, *args):
+        pass
+
+    def do_GET(self):
+        path = self.translate_path(self.path)
+        if not os.path.isfile(path):
+            self.send_error(404)
+            return
+        with open(path, "rb") as f:
+            data = f.read()
+        rng = self.headers.get("Range")
+        if rng and rng.startswith("bytes="):
+            lo, hi = (int(x) for x in rng[6:].split("-"))
+            body = data[lo:hi + 1]
+            self.send_response(206)
+            self.send_header("Content-Range",
+                             f"bytes {lo}-{hi}/{len(data)}")
+        else:
+            body = data
+            self.send_response(200)
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def do_HEAD(self):
+        path = self.translate_path(self.path)
+        if not os.path.isfile(path):
+            self.send_error(404)
+            return
+        self.send_response(200)
+        self.send_header("Content-Length", str(os.path.getsize(path)))
+        self.end_headers()
+
+
+class _NoRangeHandler(_RangeHandler):
+    """A server that ignores Range headers (plain 200 full-body GETs)."""
+
+    def do_GET(self):
+        if "Range" in self.headers:
+            del self.headers["Range"]
+        super().do_GET()
+
+
+@pytest.fixture()
+def http_server(disk):
+    srv = http.server.ThreadingHTTPServer(
+        ("127.0.0.1", 0),
+        functools.partial(_RangeHandler, directory=str(disk["dir"])))
+    t = threading.Thread(target=srv.serve_forever, daemon=True)
+    t.start()
+    yield f"http://127.0.0.1:{srv.server_address[1]}"
+    srv.shutdown()
+
+
+def test_http_range_backend_conformance(matrix, disk, http_server):
+    """The HTTP Range backend streams bit-identical tiles: prefix URL
+    (resolves manifest.json), explicit manifest URL, and the full
+    rsvd_streamed driver all match the local paths exactly."""
+    oneshot = proj.sketch(KEY, jnp.asarray(matrix), P, method="shgemm_fused")
+    # any *.json URL is a manifest (parity with the local-path branch) —
+    # not just one literally named manifest.json
+    (disk["dir"] / "alt.json").write_bytes(
+        (disk["dir"] / "manifest.json").read_bytes())
+    for loc in (http_server, http_server + "/manifest.json",
+                http_server + "/alt.json"):
+        src = stream.as_tile_source(loc, tile_rows=TILE)
+        assert isinstance(src, stream.ObjectStoreSource)
+        assert src.shape == (M, N)
+        st = _drain(src, "shgemm_fused")
+        np.testing.assert_array_equal(np.asarray(st.y), np.asarray(oneshot),
+                                      err_msg=loc)
+    res = rsvd.rsvd_streamed(KEY, stream.ObjectStoreSource(http_server,
+                                                           TILE), RANK)
+    ref = rsvd.rsvd_streamed(KEY, stream.DirectorySource(disk["dir"], TILE),
+                             RANK)
+    for field, got, want in zip(res._fields, res, ref):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=field)
+
+
+def test_http_server_ignoring_range_fails_loudly(disk):
+    srv = http.server.ThreadingHTTPServer(
+        ("127.0.0.1", 0),
+        functools.partial(_NoRangeHandler, directory=str(disk["dir"])))
+    t = threading.Thread(target=srv.serve_forever, daemon=True)
+    t.start()
+    try:
+        url = (f"http://127.0.0.1:{srv.server_address[1]}/"
+               f"shard_00000.npy")
+        with pytest.raises(ValueError, match="ignored the Range header"):
+            stream.ObjectStoreSource(url, TILE)
+    finally:
+        srv.shutdown()
 
 
 # ---------------------------------------------------------------------------
