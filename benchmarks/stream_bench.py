@@ -13,7 +13,9 @@ PRs.  ``python -m benchmarks.stream_bench --smoke`` runs a seconds-scale
 shape for the CI smoke step and asserts the streamed/one-shot bit-identity
 invariant end to end; ``--smoke-source`` covers all five TileSource kinds,
 ``--smoke-adaptive`` the tol-driven widening driver on object-store tiles
-(DESIGN.md §13), ``--smoke-kv`` the compressed-attention engine.
+(DESIGN.md §13), ``--smoke-kv`` the compressed-attention engine,
+``--smoke-resilience`` the kill-and-resume checkpoint cycle (DESIGN.md §14:
+SIGKILL mid-pass, resume from disk, bitwise factors + goodput accounting).
 """
 
 from __future__ import annotations
@@ -21,8 +23,10 @@ from __future__ import annotations
 import json
 import os
 import resource
+import subprocess
 import sys
 import tempfile
+import textwrap
 import time
 
 import jax
@@ -328,6 +332,107 @@ def adaptive_rsvd_rows(records=None, *, n=224, rank=8, oversample=2,
         f"est={info.est_history[-1]:.2e};err={err:.2e}")]
 
 
+# One resumable job, run as a REAL process so the preemption is a real
+# SIGKILL: argv = (checkpoint_dir, shard_dir, fail_at_tile; -1 = no fault).
+_RESIL_SCRIPT = textwrap.dedent("""
+    import json, sys
+    import numpy as np
+    import jax
+    jax.config.update("jax_platform_name", "cpu")
+    from repro import stream
+    from repro.core.rsvd import rsvd_streamed
+    from repro.stream import resilience as resil
+
+    ckpt, shards, fail_at = sys.argv[1], sys.argv[2], int(sys.argv[3])
+    src = stream.DirectorySource(shards, 16)
+    if fail_at >= 0:
+        src = resil.FaultySource(src, fail_at_tile=fail_at, mode="kill")
+    res, rep = rsvd_streamed(jax.random.PRNGKey(11), src, 8,
+                             checkpoint_dir=ckpt, checkpoint_every_tiles=2,
+                             resume=True, return_report=True)
+    np.savez(ckpt + "/result.npz", u=np.asarray(res.u),
+             s=np.asarray(res.s), vt=np.asarray(res.vt))
+    with open(ckpt + "/report.json", "w") as f:
+        json.dump(rep.as_record(), f)
+""")
+
+
+def resilience_rows(records=None, *, m=96, n=64, rank=8, tile=16,
+                    shard=32, fail_at=4) -> list:
+    """Fault-tolerance row (DESIGN.md §14): a checkpointed streamed-rSVD
+    job is SIGKILLed mid-pass in a subprocess, resumed with the same
+    command line, and must reproduce the uninterrupted factors bit for bit
+    — the row records the measured goodput, recomputed tiles, and
+    time-to-recover, plus an elastic host-loss cycle on the same data."""
+    key = jax.random.PRNGKey(11)
+    a = np.asarray(jax.random.normal(jax.random.fold_in(key, 1), (m, n),
+                                     jnp.float32))
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
+    with tempfile.TemporaryDirectory() as td:
+        shards = os.path.join(td, "shards")
+        ckpt = os.path.join(td, "ckpt")
+        pipeline.write_matrix_shards(shards, a, shard)
+        args = [sys.executable, "-c", _RESIL_SCRIPT, ckpt, shards]
+
+        t0 = time.perf_counter()
+        dead = subprocess.run(args + [str(fail_at)], env=env, cwd=root,
+                              capture_output=True, text=True, timeout=600)
+        assert dead.returncode == -9, (
+            f"expected the fault-injected attempt to die by SIGKILL, got "
+            f"rc={dead.returncode}\n{dead.stderr[-2000:]}")
+        alive = subprocess.run(args + ["-1"], env=env, cwd=root,
+                               capture_output=True, text=True, timeout=600)
+        assert alive.returncode == 0, alive.stderr[-2000:]
+        dt = time.perf_counter() - t0
+
+        base = rsvd.rsvd_streamed(key, stream.DirectorySource(shards, tile),
+                                  rank)
+        got = np.load(os.path.join(ckpt, "result.npz"))
+        for f, want in (("u", base.u), ("s", base.s), ("vt", base.vt)):
+            np.testing.assert_array_equal(
+                got[f], np.asarray(want),
+                err_msg=f"resumed factor {f} != uninterrupted run")
+        with open(os.path.join(ckpt, "report.json")) as f:
+            rep = json.load(f)
+        assert rep["attempts"] == 2, rep
+        assert rep["goodput"] > 0.5, rep
+        assert rep["tiles_recomputed"] <= 2, rep   # <= checkpoint_every
+
+    # elastic host-loss replay on the same matrix (in-process)
+    srcs = [stream.ArraySource(a[i * shard:(i + 1) * shard], tile)
+            for i in range(-(-m // shard))]
+    res_e, rep_e = stream.elastic_distributed_rsvd_streamed(
+        key, srcs, rank, lose_hosts=(1,), lose_after_tiles=1,
+        return_report=True)
+    for f, got_e, want in zip(("u", "s", "vt"), res_e, base):
+        np.testing.assert_array_equal(
+            np.asarray(got_e), np.asarray(want),
+            err_msg=f"elastic factor {f} != single-host run")
+    assert rep_e.goodput > 0.5, rep_e.as_record()
+
+    rec = {
+        "kind": "resilience", "m": m, "n": n, "rank": rank, "tile": tile,
+        "checkpoint_every_tiles": 2, "fail_at_tile": fail_at,
+        "attempts": rep["attempts"],
+        "tiles_recomputed": rep["tiles_recomputed"],
+        "goodput": round(rep["goodput"], 4),
+        "time_to_recover_s": round(
+            rep["recovery_events"][0]["time_to_recover_s"] or 0.0, 4),
+        "bitwise_equal": True,
+        "elastic_goodput": round(rep_e.goodput, 4),
+        "elastic_tiles_recomputed": rep_e.tiles_recomputed,
+        "wall_s": round(dt, 3),
+    }
+    if records is not None:
+        records.append(rec)
+    return [row(
+        f"stream.resilience.{m}x{n}.r{rank}.t{tile}", dt * 1e6,
+        f"goodput={rec['goodput']};recomputed={rec['tiles_recomputed']};"
+        f"attempts={rec['attempts']};bitwise=1;"
+        f"elastic_goodput={rec['elastic_goodput']}")]
+
+
 def _merge_bench_json(records, kinds) -> None:
     """Replace records of ``kinds`` in BENCH_stream.json, keep the rest —
     smoke steps must not clobber the full run()'s rows."""
@@ -349,7 +454,8 @@ def run() -> list:
             + rsvd_streamed_bench(records=records)
             + memmap_source_rows(records=records)
             + adaptive_rsvd_rows(records=records)
-            + kv_serving_rows(records=records))
+            + kv_serving_rows(records=records)
+            + resilience_rows(records=records))
     with open(BENCH_JSON, "w") as f:
         json.dump(records, f, indent=1)
     rows.append(row("stream.bench_json.written", 0.0, BENCH_JSON))
@@ -466,6 +572,24 @@ def smoke_kv() -> None:
           f"{BENCH_JSON}")
 
 
+def smoke_resilience() -> None:
+    """CI `resilience` smoke: the kill-and-resume cycle above —
+    ``resilience_rows`` asserts the acceptance criteria (SIGKILLed attempt
+    dies, resume is bitwise-equal to the uninterrupted run, recomputation
+    bounded by checkpoint_every_tiles, goodput > 0.5, elastic host-loss
+    replay also bitwise) and this step merges the ``resilience`` row into
+    BENCH_stream.json.  Seconds, not minutes."""
+    records = []
+    resilience_rows(records=records)
+    _merge_bench_json(records, {"resilience"})
+    rec = records[0]
+    print(f"resilience smoke OK: attempt 1 SIGKILLed, resume bitwise-equal "
+          f"in {rec['attempts']} attempts, {rec['tiles_recomputed']} tile(s)"
+          f" recomputed (<= {rec['checkpoint_every_tiles']}), goodput "
+          f"{rec['goodput']} > 0.5, elastic host-loss goodput "
+          f"{rec['elastic_goodput']} -> {BENCH_JSON}")
+
+
 if __name__ == "__main__":
     jax.config.update("jax_platform_name", "cpu")
     if "--smoke-source" in sys.argv:
@@ -474,6 +598,8 @@ if __name__ == "__main__":
         smoke_adaptive()
     elif "--smoke-kv" in sys.argv:
         smoke_kv()
+    elif "--smoke-resilience" in sys.argv:
+        smoke_resilience()
     elif "--smoke" in sys.argv:
         smoke()
     else:

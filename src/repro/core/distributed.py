@@ -21,10 +21,12 @@ production mesh in the dry-run and runs on small host meshes in tests.
 from __future__ import annotations
 
 import functools
+import time
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
@@ -208,12 +210,31 @@ def _psum_stack(parts, mesh: Mesh, axis: str):
                             axis)
 
 
+def _dist_payload(resil, done, cur, host):
+    """Checkpoint payload for the distributed sketch pass: the fold-merge
+    of all completed hosts (``done``), the in-flight host's partial
+    (``cur``), and which host the cursor is in."""
+    arrays, meta = {}, {}
+    if done is not None:
+        arrays, meta = resil.state_to_payload(done, prefix="done")
+    if cur is not None:
+        a2, m2 = resil.state_to_payload(cur, prefix="cur")
+        arrays.update(a2)
+        meta.update(m2)
+    meta["cursor"] = {"host": int(host)}
+    return arrays, meta
+
+
 def distributed_rsvd_streamed(key, sources, rank: int, mesh: Mesh, *,
                               oversample: int = 10, passes: int = 2,
                               method: ProjectionMethod = "shgemm_fused",
                               omega_dtype=jnp.bfloat16,
                               data_axis: str = "data",
-                              prefetch_depth: int | None = 1):
+                              prefetch_depth: int | None = 1,
+                              checkpoint_dir=None,
+                              checkpoint_every_tiles: int | None = None,
+                              resume: bool = False,
+                              return_report: bool = False):
     """Multi-host × out-of-core randomized SVD: every shard of the data
     axis streams its own :class:`~repro.stream.TileSource` (a disjoint
     global row range of A, e.g. one ``.npy`` shard dir per host), the
@@ -241,6 +262,17 @@ def distributed_rsvd_streamed(key, sources, rank: int, mesh: Mesh, *,
     per-host states (and one stacked copy) at once — a
     ``len(sources)``-times multiplier a true multi-process deployment,
     which holds only its own state, does not pay.
+
+    Fault tolerance (``checkpoint_dir=...``, DESIGN.md §14): pass 1
+    checkpoints at tile granularity — the payload is the fold-merge of
+    all fully-sketched hosts plus the in-flight host's partial state and
+    cursor (fold-merging disjoint-row states is bitwise equal to the
+    collective psum, so the checkpointed path returns the identical
+    factors).  Later passes checkpoint at pass boundaries via the shared
+    power-iteration driver, so a kill there replays at most one pass.
+    ``resume=True`` restarts from the last checkpoint;
+    ``return_report=True`` appends a
+    :class:`repro.stream.resilience.ResilienceReport`.
     """
     from repro import stream  # deferred: stream imports core modules
     from repro.core.rsvd import _dot, streamed_power_factor
@@ -271,27 +303,118 @@ def distributed_rsvd_streamed(key, sources, rank: int, mesh: Mesh, *,
         m += s.n_rows
     p_hat = min(rank + oversample, min(m, n_cols))
 
-    def host_tiles(s, r0):
-        off = r0
-        for blk in stream.source_tiles(s, prefetch_depth=prefetch_depth):
+    ck = None
+    restored = None
+    if checkpoint_dir is None:
+        if checkpoint_every_tiles is not None:
+            raise ValueError("checkpoint_every_tiles needs checkpoint_dir=")
+        if resume:
+            raise ValueError("resume=True needs checkpoint_dir= (there is "
+                             "nowhere to resume from)")
+        if return_report:
+            raise ValueError("return_report=True needs checkpoint_dir= "
+                             "(the report measures the checkpointed job)")
+    else:
+        from repro.stream import resilience as resil
+        fingerprint = {
+            "job": "distributed_rsvd_streamed",
+            "key": resil.key_fingerprint(key),
+            "rank": int(rank), "p_hat": int(p_hat), "passes": int(passes),
+            "method": str(method),
+            "omega_dtype": str(jnp.dtype(omega_dtype)),
+            "n_rows": int(m), "n_cols": int(n_cols),
+            "hosts": len(srcs),
+        }
+        ck = resil.SketchJobCheckpointer(
+            checkpoint_dir,
+            every_tiles=(16 if checkpoint_every_tiles is None
+                         else checkpoint_every_tiles),
+            fingerprint=fingerprint, resume=resume)
+        restored = ck.restore()
+
+    def host_tiles(s, r0, start_local=0):
+        off = r0 + start_local
+        t_last = time.perf_counter()
+        for blk in stream.source_tiles(s, prefetch_depth=prefetch_depth,
+                                       start_row=start_local):
             yield off, blk
             off += blk.shape[0]
+            if ck is not None:
+                now = time.perf_counter()
+                ck.note_tile(now - t_last)
+                t_last = now
         if off - r0 != s.n_rows:
             raise ValueError(f"source tiles cover {off - r0} rows, its "
                              f"shape promises {s.n_rows}")
 
-    # Pass 1: per-host sketches over the GLOBAL Omega lattice, then the
-    # collective merge.  Disjoint row coverage makes the psum exact.
-    states = []
-    for s, r0 in zip(srcs, row_starts):
-        st = stream.init(key, n_cols, p_hat, max_rows=m, method=method,
-                         omega_dtype=omega_dtype)
-        for off, blk in host_tiles(s, r0):
-            st = stream.update(st, blk, off)
-        states.append(st)
-    merged = _shard_map_stack(
-        lambda st: stream.merge_across_hosts(st, data_axis),
-        states, mesh, data_axis)
+    def finished(res):
+        if ck is None:
+            return res
+        report = ck.finish(tiles_total=sum(
+            resil._count_tiles(s) or 0 for s in srcs) * passes)
+        return (res, report) if return_report else res
+
+    power_resume = None
+    if restored is not None and restored.phase == "power":
+        power_resume = restored
+    elif restored is not None and restored.phase != "dist-sketch":
+        raise RuntimeError(f"checkpoint under {checkpoint_dir} is in "
+                           f"unknown phase {restored.phase!r}")
+
+    merged = None
+    if power_resume is None and ck is None:
+        # Pass 1: per-host sketches over the GLOBAL Omega lattice, then the
+        # collective merge.  Disjoint row coverage makes the psum exact.
+        states = []
+        for s, r0 in zip(srcs, row_starts):
+            st = stream.init(key, n_cols, p_hat, max_rows=m, method=method,
+                             omega_dtype=omega_dtype)
+            for off, blk in host_tiles(s, r0):
+                st = stream.update(st, blk, off)
+            states.append(st)
+        merged = _shard_map_stack(
+            lambda st: stream.merge_across_hosts(st, data_axis),
+            states, mesh, data_axis)
+    elif power_resume is None:
+        # Checkpointed pass 1: fold-merge each finished host into `done`
+        # (bitwise equal to the psum — disjoint rows), checkpoint
+        # done + in-flight partial + cursor at tile granularity.
+        done = None
+        h_start, local_start, g_tiles = 0, 0, 0
+        cur0 = None
+        if restored is not None:
+            if "done.y" in restored.arrays:
+                done = resil.state_from_payload(restored.arrays,
+                                                restored.meta, "done")
+            if "cur.y" in restored.arrays:
+                cur0 = resil.state_from_payload(restored.arrays,
+                                                restored.meta, "cur")
+            h_start = int(restored.meta["cursor"]["host"])
+            g_tiles = restored.tiles_done
+            if h_start < len(srcs):
+                local_start = restored.rows_done - row_starts[h_start]
+        for h in range(h_start, len(srcs)):
+            s, r0 = srcs[h], row_starts[h]
+            if h == h_start and cur0 is not None:
+                st, start_local = cur0, local_start
+            else:
+                st = stream.init(key, n_cols, p_hat, max_rows=m,
+                                 method=method, omega_dtype=omega_dtype)
+                start_local = 0
+            for off, blk in host_tiles(s, r0, start_local):
+                st = stream.update(st, blk, off)
+                g_tiles += 1
+                ck.tick(phase="dist-sketch", pass_idx=1,
+                        tiles_done=g_tiles,
+                        rows_done=int(off + blk.shape[0]),
+                        payload=lambda d=done, c=st, hh=h:
+                            _dist_payload(resil, d, c, hh))
+            done = st if done is None else stream.merge(done, st)
+        merged = done
+        ck.commit(phase="dist-sketch", pass_idx=1, tiles_done=g_tiles,
+                  rows_done=int(m),
+                  payload=lambda: _dist_payload(resil, merged, None,
+                                                len(srcs)))
 
     # Passes 2..: the shared power-iteration driver (rsvd.py owns the
     # algebra — single-host and distributed cannot drift), with each
@@ -320,6 +443,25 @@ def distributed_rsvd_streamed(key, sources, rank: int, mesh: Mesh, *,
                 axis=0))
         return _psum_stack(parts, mesh, data_axis)     # Y = A Z (rows exact)
 
-    return streamed_power_factor(stream.range_basis(merged), rank, passes,
-                                 accumulate_b=accumulate_b,
-                                 accumulate_y=accumulate_y)
+    on_pass_done = None
+    if ck is not None:
+        def on_pass_done(pass_idx, which, basis):
+            ck.commit(phase="power", pass_idx=pass_idx, tiles_done=0,
+                      rows_done=0,
+                      payload=lambda: ({"basis": np.asarray(basis)},
+                                       {"power": {"which": which}}))
+
+    if power_resume is not None:
+        basis = jnp.asarray(power_resume.arrays["basis"])
+        which = power_resume.meta["power"]["which"]
+        return finished(streamed_power_factor(
+            basis if which == "q" else None, rank, passes,
+            accumulate_b=accumulate_b, accumulate_y=accumulate_y,
+            start_pass=power_resume.pass_idx + 1,
+            z=basis if which == "z" else None,
+            start_on_rows=(which == "q"), on_pass_done=on_pass_done))
+
+    return finished(streamed_power_factor(
+        stream.range_basis(merged), rank, passes,
+        accumulate_b=accumulate_b, accumulate_y=accumulate_y,
+        on_pass_done=on_pass_done))

@@ -10,6 +10,7 @@ paper's mixed-precision SHGEMM.
 from __future__ import annotations
 
 import functools
+import time
 from typing import NamedTuple, Sequence
 
 import jax
@@ -100,7 +101,11 @@ def rp_sthosvd_streamed(key: jax.Array, slabs, dims=None, ranks=None, *,
                         omega_dtype=jnp.bfloat16,
                         prefetch_depth: int | None = 1,
                         tol: float | None = None,
-                        max_ranks=None) -> TuckerResult:
+                        max_ranks=None,
+                        checkpoint_dir=None,
+                        checkpoint_every_tiles: int | None = None,
+                        resume: bool = False,
+                        return_report: bool = False) -> TuckerResult:
     """Single-pass streaming Tucker of a tensor that arrives as slabs along
     axis 0 (out-of-core tensors, token/frame streams).
 
@@ -124,6 +129,16 @@ def rp_sthosvd_streamed(key: jax.Array, slabs, dims=None, ranks=None, *,
     pass: the rank decision needs only the (tiny) core, so "grow between
     passes" (the rSVD adaptive driver's replay loop) is unnecessary here —
     the ceilings bound the work and the truncation reveals the rank.
+
+    Fault tolerance (``checkpoint_dir=...``, DESIGN.md §14): the whole
+    job is one slab pass over a TuckerSketch, checkpointed with its slab
+    cursor every ``checkpoint_every_tiles`` slabs; ``resume=True``
+    restarts from the last checkpoint and the result is bitwise equal to
+    the uninterrupted run (slab updates write disjoint core/mode-sketch
+    slices; replay preserves slab order).  Adaptive ``tol=`` composes
+    freely here — the sketch widths are fixed at init, the rank decision
+    happens after the stream.  ``return_report=True`` returns
+    ``(TuckerResult, ResilienceReport)``.
     """
     from repro import stream  # deferred: stream imports this module
     if tol is not None:
@@ -156,18 +171,80 @@ def rp_sthosvd_streamed(key: jax.Array, slabs, dims=None, ranks=None, *,
         raise ValueError(f"dims={tuple(dims)} but the slab source has "
                          f"shape {src.shape}")
     dims = src.shape
-    ts = stream.tucker_init(key, dims, ranks, method=method, dist=dist,
-                            omega_dtype=omega_dtype)
-    off = 0
-    for slab in stream.source_tiles(src, prefetch_depth=prefetch_depth):
+
+    ck = None
+    if checkpoint_dir is None:
+        if checkpoint_every_tiles is not None:
+            raise ValueError("checkpoint_every_tiles needs checkpoint_dir=")
+        if resume:
+            raise ValueError("resume=True needs checkpoint_dir= (there is "
+                             "nowhere to resume from)")
+        if return_report:
+            raise ValueError("return_report=True needs checkpoint_dir= "
+                             "(the report measures the checkpointed job)")
+    else:
+        from repro.stream import resilience as resil
+        if not src.replayable:
+            raise ValueError(
+                "checkpoint_dir needs a replayable slab source: resuming "
+                "replays the slab suffix after the checkpointed cursor, "
+                "which a one-shot generator cannot provide")
+        fingerprint = {
+            "job": "rp_sthosvd_streamed",
+            "key": resil.key_fingerprint(key),
+            "dims": [int(d) for d in dims],
+            "ranks": [int(r) for r in ranks],
+            "method": str(method), "dist": str(dist),
+            "omega_dtype": str(jnp.dtype(omega_dtype)),
+        }
+        ck = resil.SketchJobCheckpointer(
+            checkpoint_dir,
+            every_tiles=(16 if checkpoint_every_tiles is None
+                         else checkpoint_every_tiles),
+            fingerprint=fingerprint, resume=resume)
+
+    start_tile = start_row = 0
+    restored = ck.restore() if ck is not None else None
+    if restored is not None:
+        if restored.phase != "tucker":
+            raise RuntimeError(f"checkpoint under {checkpoint_dir} is in "
+                               f"unknown phase {restored.phase!r}")
+        ts = resil.tucker_from_payload(restored.arrays, restored.meta)
+        start_tile, start_row = restored.tiles_done, restored.rows_done
+    else:
+        ts = stream.tucker_init(key, dims, ranks, method=method, dist=dist,
+                                omega_dtype=omega_dtype)
+
+    off = start_row
+    tiles_done = start_tile
+    t_last = time.perf_counter()
+    for slab in stream.source_tiles(src, prefetch_depth=prefetch_depth,
+                                    start_row=start_row):
         ts = stream.tucker_update(ts, slab, off)
         off += slab.shape[0]
+        tiles_done += 1
+        if ck is not None:
+            now = time.perf_counter()
+            ck.note_tile(now - t_last)
+            t_last = now
+            ck.tick(phase="tucker", pass_idx=1, tiles_done=tiles_done,
+                    rows_done=int(off),
+                    payload=lambda t=ts: resil.tucker_to_payload(t))
     if off != dims[0]:
         raise ValueError(f"slabs cover {off} rows of axis 0, expected "
                          f"{dims[0]}")
     res = stream.tucker_finalize(ts)
     if tol is not None:
         res = truncate_tucker(res, tol)
+    if ck is not None:
+        # final commit so a crash AFTER the stream (during finalize) still
+        # resumes with zero slab recomputation
+        ck.commit(phase="tucker", pass_idx=1, tiles_done=tiles_done,
+                  rows_done=int(off),
+                  payload=lambda: resil.tucker_to_payload(ts))
+        report = ck.finish(tiles_total=resil._count_tiles(src) or tiles_done)
+        if return_report:
+            return res, report
     return res
 
 

@@ -8,10 +8,12 @@ target; QR (line 2), B = Q^T A (line 3), tSVD (line 4) and the back-projection
 from __future__ import annotations
 
 import functools
+import time
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import projection as proj
 
@@ -109,7 +111,11 @@ def rsvd_streamed(key: jax.Array, a_blocks, rank: int, *,
                   prefetch_depth: int | None = 1,
                   tol: float | None = None,
                   max_oversample: int | None = None,
-                  return_info: bool = False):
+                  return_info: bool = False,
+                  checkpoint_dir=None,
+                  checkpoint_every_tiles: int | None = None,
+                  resume: bool = False,
+                  return_report: bool = False):
     """Randomized SVD of an out-of-core matrix streamed as row tiles.
 
     ``a_blocks`` is anything ``stream.as_tile_source`` accepts: a
@@ -170,6 +176,24 @@ def rsvd_streamed(key: jax.Array, a_blocks, rank: int, *,
     fused lattice (nested sketch subspaces), but the f32 cancellation
     ``||A||² - Σσ²`` floors it near sqrt(eps)·||A||_F ≈ 3.5e-4 relative —
     a ``tol`` below that floor just widens to the cap.
+
+    Fault tolerance (``checkpoint_dir=...``, DESIGN.md §14): checkpoint
+    the sketch state + tile cursor every ``checkpoint_every_tiles`` tiles
+    (atomic + async, same discipline as ``train/checkpoint.py``) so a
+    killed job restarted with ``resume=True`` continues from the last
+    checkpoint instead of from scratch.  The cursor is always a tile
+    boundary and the replay preserves the original tile order, so the
+    resumed result is **bitwise equal** to the uninterrupted run, with at
+    most ``checkpoint_every_tiles`` tiles recomputed during the sketch and
+    B passes (power passes for ``passes >= 3`` checkpoint at pass
+    boundaries — one pass of recomputation worst case).  ``resume=True``
+    with an empty directory is a fresh start, so one command line serves
+    attempt 1 and every retry; a checkpoint written under a different
+    key/rank/method/shape fails loudly (fingerprint mismatch).  Requires a
+    replayable source; incompatible with adaptive mode (``tol=`` owns a
+    data-dependent pass schedule).  ``return_report=True`` additionally
+    returns a :class:`repro.stream.resilience.ResilienceReport` (attempts,
+    goodput, tiles recomputed, recovery events).
     """
     from repro import stream  # deferred: stream imports this module's result
     if passes < 1:
@@ -194,6 +218,22 @@ def rsvd_streamed(key: jax.Array, a_blocks, rank: int, *,
     if return_info and tol is None:
         raise ValueError("return_info=True only applies to adaptive "
                          "(tol=...) runs")
+    if checkpoint_dir is None:
+        if checkpoint_every_tiles is not None:
+            raise ValueError("checkpoint_every_tiles needs checkpoint_dir=")
+        if resume:
+            raise ValueError("resume=True needs checkpoint_dir= (there is "
+                             "nowhere to resume from)")
+        if return_report:
+            raise ValueError("return_report=True needs checkpoint_dir= "
+                             "(the report measures the checkpointed job)")
+    elif tol is not None:
+        raise ValueError(
+            "checkpoint_dir is incompatible with adaptive mode (tol=): "
+            "the widen schedule is data-dependent, so a resumed run could "
+            "not prove it replays the identical pass sequence — run "
+            "adaptive jobs without checkpointing, or checkpoint a "
+            "fixed-oversample job")
     shape = ((int(n_rows), int(n_cols))
              if n_rows is not None and n_cols is not None else None)
     try:
@@ -224,12 +264,26 @@ def rsvd_streamed(key: jax.Array, a_blocks, rank: int, *,
             "zero-arg factory) or a sequence of tiles (or use passes=1 "
             "for the strict single-pass finalizer)")
 
-    def tiles():
-        off = 0
-        it = stream.source_tiles(src, prefetch_depth=prefetch_depth)
-        for i, blk in enumerate(it):
+    ck = None   # bound below; tiles() reads it through the closure
+
+    def tiles(start_tile=0, start_row=0):
+        # Resume contract: tiles_from yields the EXACT suffix of the full
+        # tiling (same boundaries, same order), so every f32 accumulation
+        # downstream sees the same operand sequence as an uninterrupted
+        # run — the bitwise-resume guarantee.  The post-yield note_tile
+        # times the CONSUMER's absorption of each tile (generator resumes
+        # when the next tile is requested).
+        off = start_row
+        it = stream.source_tiles(src, prefetch_depth=prefetch_depth,
+                                 start_row=start_row)
+        t_last = time.perf_counter()
+        for i, blk in enumerate(it, start=start_tile):
             yield i, off, blk
             off += blk.shape[0]
+            if ck is not None:
+                now = time.perf_counter()
+                ck.note_tile(now - t_last)
+                t_last = now
         if off != n_rows:
             raise ValueError(f"tiles cover {off} rows, expected {n_rows}")
 
@@ -239,18 +293,78 @@ def rsvd_streamed(key: jax.Array, a_blocks, rank: int, *,
     if max_oversample is not None:
         p_cap = min(p_cap, rank + max_oversample)
     p_hat = min(rank + oversample, p_cap if tol is not None else minmn)
-    state = stream.init(key, n_cols, p_hat, max_rows=n_rows,
-                        left=(passes == 1), method=method,
-                        omega_dtype=omega_dtype)
+
+    restored = None
+    if checkpoint_dir is not None:
+        from repro.stream import resilience as resil
+        if not src.replayable:
+            raise ValueError(
+                "checkpoint_dir needs a replayable tile source: resuming "
+                "replays the tile suffix after the checkpointed cursor, "
+                "which a one-shot generator cannot provide")
+        fingerprint = {
+            "job": "rsvd_streamed",
+            "key": resil.key_fingerprint(key),
+            "rank": int(rank), "p_hat": int(p_hat), "passes": int(passes),
+            "method": str(method),
+            "omega_dtype": str(jnp.dtype(omega_dtype)),
+            "n_rows": int(n_rows), "n_cols": int(n_cols),
+        }
+        ck = resil.SketchJobCheckpointer(
+            checkpoint_dir,
+            every_tiles=(16 if checkpoint_every_tiles is None
+                         else checkpoint_every_tiles),
+            fingerprint=fingerprint, resume=resume)
+        restored = ck.restore()
+
+    def done(res):
+        if ck is None:
+            return res
+        report = ck.finish(
+            tiles_total=(resil._count_tiles(src) or 0) * passes)
+        return (res, report) if return_report else res
+
+    start_tile = start_row = 0
+    b_resume = power_resume = None
+    if restored is not None:
+        if restored.phase == "sketch":
+            state = resil.state_from_payload(restored.arrays, restored.meta)
+            start_tile, start_row = restored.tiles_done, restored.rows_done
+        elif restored.phase == "b":
+            state = resil.state_from_payload(restored.arrays, restored.meta)
+            b_resume = (jnp.asarray(restored.arrays["b"]),
+                        restored.tiles_done, restored.rows_done)
+        elif restored.phase == "power":
+            power_resume = restored
+        else:
+            raise RuntimeError(f"checkpoint under {checkpoint_dir} is in "
+                               f"unknown phase {restored.phase!r}")
+    if restored is None:
+        state = stream.init(key, n_cols, p_hat, max_rows=n_rows,
+                            left=(passes == 1), method=method,
+                            omega_dtype=omega_dtype)
+
     fro2 = jnp.zeros((), jnp.float32)   # ||A||_F² for the posterior estimate
-    for i, off, blk in tiles():
-        state = stream.update(state, blk, off)
-        if tol is not None:
-            fro2 = fro2 + jnp.sum(jnp.square(blk.astype(jnp.float32)))
-        if tile_callback is not None:
-            tile_callback(i, off + blk.shape[0])
+    if b_resume is None and power_resume is None:
+        tiles_done, rows_done = start_tile, start_row
+        for i, off, blk in tiles(start_tile, start_row):
+            state = stream.update(state, blk, off)
+            if tol is not None:
+                fro2 = fro2 + jnp.sum(jnp.square(blk.astype(jnp.float32)))
+            if tile_callback is not None:
+                tile_callback(i, off + blk.shape[0])
+            tiles_done, rows_done = i + 1, off + int(blk.shape[0])
+            if ck is not None:
+                ck.tick(phase="sketch", pass_idx=1, tiles_done=tiles_done,
+                        rows_done=rows_done,
+                        payload=lambda s=state: resil.state_to_payload(s))
+        if ck is not None:
+            # pass boundary: never re-enter the sketch phase on resume
+            ck.commit(phase="sketch", pass_idx=1, tiles_done=tiles_done,
+                      rows_done=rows_done,
+                      payload=lambda: resil.state_to_payload(state))
     if passes == 1:
-        return stream.svd(state, rank)
+        return done(stream.svd(state, rank))
 
     def accumulate_b(q):
         b = jnp.zeros((q.shape[1], n_cols), jnp.float32)
@@ -266,6 +380,36 @@ def rsvd_streamed(key: jax.Array, a_blocks, rank: int, *,
             n_cols=n_cols, method=method, omega_dtype=omega_dtype,
             return_info=return_info)
 
+    if ck is not None and passes == 2 and power_resume is None:
+        # checkpointed B pass, tile granularity: B's f32 summation is
+        # order-sensitive, so the partial B + cursor is the checkpoint and
+        # the replay appends the identical remaining terms.  Q is NOT
+        # stored: it is recomputed from the (checkpointed) sketch state,
+        # deterministically.  Same algebra as streamed_power_factor's
+        # final on-rows branch.
+        q = stream.range_basis(state)
+        if b_resume is not None:
+            b, tiles_done, rows_done = b_resume
+        else:
+            b = jnp.zeros((q.shape[1], n_cols), jnp.float32)
+            tiles_done, rows_done = 0, 0
+
+        def b_payload(bb):
+            arrays, meta = resil.state_to_payload(state)
+            arrays["b"] = np.asarray(bb)
+            return arrays, meta
+
+        for i, off, blk in tiles(tiles_done, rows_done):
+            b = b + _dot(q[off:off + blk.shape[0]].T,
+                         blk.astype(jnp.float32))
+            tiles_done, rows_done = i + 1, off + int(blk.shape[0])
+            ck.tick(phase="b", pass_idx=2, tiles_done=tiles_done,
+                    rows_done=rows_done,
+                    payload=lambda bb=b: b_payload(bb))
+        u_b, s, vt = jnp.linalg.svd(b, full_matrices=False)
+        u = _dot(q, u_b)
+        return done(SVDResult(u[:, :rank], s[:rank], vt[:rank, :]))
+
     def accumulate_y(z):
         # tiles cover the rows in order, so Y = A·Z is the concatenation of
         # per-tile products — O(m·p) total, where an eager .at[].set per
@@ -273,9 +417,31 @@ def rsvd_streamed(key: jax.Array, a_blocks, rank: int, *,
         return jnp.concatenate([_dot(blk.astype(jnp.float32), z)
                                 for _, _, blk in tiles()], axis=0)
 
-    return streamed_power_factor(stream.range_basis(state), rank, passes,
-                                 accumulate_b=accumulate_b,
-                                 accumulate_y=accumulate_y)
+    on_pass_done = None
+    if ck is not None:
+        def on_pass_done(pass_idx, which, basis):
+            # power passes checkpoint at pass boundaries: each basis is a
+            # full orthonormal factor, so a resume replays at most one
+            # pass (documented relaxation of the per-tile bound)
+            ck.commit(phase="power", pass_idx=pass_idx, tiles_done=0,
+                      rows_done=0,
+                      payload=lambda: ({"basis": np.asarray(basis)},
+                                       {"power": {"which": which}}))
+
+    if power_resume is not None:
+        basis = jnp.asarray(power_resume.arrays["basis"])
+        which = power_resume.meta["power"]["which"]
+        return done(streamed_power_factor(
+            basis if which == "q" else None, rank, passes,
+            accumulate_b=accumulate_b, accumulate_y=accumulate_y,
+            start_pass=power_resume.pass_idx + 1,
+            z=basis if which == "z" else None,
+            start_on_rows=(which == "q"), on_pass_done=on_pass_done))
+
+    return done(streamed_power_factor(stream.range_basis(state), rank,
+                                      passes, accumulate_b=accumulate_b,
+                                      accumulate_y=accumulate_y,
+                                      on_pass_done=on_pass_done))
 
 
 def _adaptive_rsvd(stream, key, state, rank, *, tol, p_cap, fro2, tiles,
@@ -341,7 +507,10 @@ def _adaptive_rsvd(stream, key, state, rank, *, tol, p_cap, fro2, tiles,
 
 
 def streamed_power_factor(q: jax.Array, rank: int, passes: int, *,
-                          accumulate_b, accumulate_y) -> SVDResult:
+                          accumulate_b, accumulate_y, start_pass: int = 2,
+                          z: jax.Array | None = None,
+                          start_on_rows: bool = True,
+                          on_pass_done=None) -> SVDResult:
     """Shared multi-pass driver for streamed power iteration
     (DESIGN.md §11.3): alternate row-space basis Q (m, p) and column-space
     basis Z (n, p), one stream over the tiles per pass, starting from the
@@ -356,10 +525,23 @@ def streamed_power_factor(q: jax.Array, rank: int, passes: int, *,
     ``rsvd_streamed``, per-host partials + one psum in
     ``distributed_rsvd_streamed`` — both share this exact algebra, so the
     two paths cannot drift numerically.
+
+    Resume hooks (DESIGN.md §14): each non-final pass ends in exactly one
+    orthonormal basis — Q after an off-rows pass, Z after an on-rows
+    pass — which is the pass's complete successor state.
+    ``on_pass_done(pass_idx, which, basis)`` (``which`` in ``{"q", "z"}``)
+    hands it to a checkpointer; a killed job re-enters the iteration
+    mid-schedule via ``start_pass`` + the saved basis (``q`` +
+    ``start_on_rows=True`` or ``z`` + ``start_on_rows=False``), bitwise
+    equal to the uninterrupted schedule because each pass is a pure
+    function of its entry basis and the tile stream.
     """
-    z = None
-    on_rows = True
-    for pass_idx in range(2, passes + 1):
+    on_rows = start_on_rows
+    if on_rows and q is None:
+        raise ValueError("start_on_rows=True needs the row basis q")
+    if not on_rows and z is None:
+        raise ValueError("start_on_rows=False needs the column basis z")
+    for pass_idx in range(start_pass, passes + 1):
         last = pass_idx == passes
         if on_rows:
             b = accumulate_b(q)
@@ -369,6 +551,8 @@ def streamed_power_factor(q: jax.Array, rank: int, passes: int, *,
                 return SVDResult(u[:, :rank], s[:rank], vt[:rank, :])
             z, _ = jnp.linalg.qr(b.T)                  # orth(A^T Q)
             on_rows = False
+            if on_pass_done is not None:
+                on_pass_done(pass_idx, "z", z)
         else:
             y = accumulate_y(z)
             if last:
@@ -378,6 +562,8 @@ def streamed_power_factor(q: jax.Array, rank: int, passes: int, *,
                                  _dot(wt, z.T)[:rank, :])
             q, _ = jnp.linalg.qr(y)
             on_rows = True
+            if on_pass_done is not None:
+                on_pass_done(pass_idx, "q", q)
     raise AssertionError("unreachable")  # loop always returns on last pass
 
 

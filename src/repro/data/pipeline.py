@@ -180,6 +180,31 @@ def write_shard_manifest(dirpath: str | Path,
     return mpath
 
 
+def shard_row_ranges(dirpath: str | Path) -> list[tuple[str, int, int]]:
+    """Global ``(name, start, end)`` row range of every shard in row order,
+    from the directory's ``manifest.json`` (written first if absent).
+
+    This is the fleet's partition map: hosts claim contiguous runs of
+    shard ranges, and after a host loss the survivors re-split the dead
+    host's ranges at tile boundaries
+    (``stream.resilience.partition_rows`` + ``sketch_row_range``) — the
+    ranges here are the coarse units that re-meshing subdivides."""
+    dirpath = Path(dirpath)
+    mpath = dirpath / "manifest.json"
+    if not mpath.is_file():
+        mpath = write_shard_manifest(dirpath)
+    doc = json.loads(mpath.read_text())
+    if doc.get("format") != "repro-shard-manifest":
+        raise ValueError(f"{mpath}: not a repro-shard-manifest "
+                         f"(format={doc.get('format')!r})")
+    out, off = [], 0
+    for sh in doc["shards"]:
+        rows = int(sh["rows"])
+        out.append((sh["name"], off, off + rows))
+        off += rows
+    return out
+
+
 def matrix_tile_source(path: str | Path, tile_rows: int = 256, *,
                        range_reads: bool = False):
     """Open a ``write_matrix_npy`` file or ``write_matrix_shards`` directory

@@ -13,7 +13,11 @@ consumers rely on) and objectstore.py (ObjectStoreSource — the same
 contract over byte-range reads: local-file ranges as the reference
 backend, HTTP Range for real stores, manifest.json for zero-header-read
 layouts).  Adaptive widening: SketchState.widen + hstack grow the sketch
-width over the global Omega lattice (DESIGN.md §13).
+width over the global Omega lattice (DESIGN.md §13).  Fault tolerance:
+resilience.py (SketchJobCheckpointer — atomic/async checkpoint + resume
+cursor for the streamed drivers; FaultySource / FlakyRangeFetcher fault
+injection; elastic_distributed_rsvd_streamed host-loss replay;
+ResilienceReport goodput metrics, DESIGN.md §14).
 
 Consumers: core/rsvd.py ``rsvd_streamed`` (out-of-core matrices, power
 iteration over replayable sources), core/distributed.py
@@ -33,9 +37,16 @@ from repro.stream.source import (ArraySource, DirectorySource,
                                  as_tile_source, check_shard_name_order,
                                  prefetch, source_tiles)
 from repro.stream.objectstore import (FileRangeFetcher, HttpRangeFetcher,
-                                      ObjectStoreSource, read_npy_header)
+                                      ObjectStoreSource, RetryPolicy,
+                                      ShortReadError, read_npy_header)
 from repro.stream.tucker import (TuckerSketch, tucker, tucker_finalize,
                                  tucker_init, tucker_merge, tucker_update)
+from repro.stream.resilience import (FaultInjected, FaultySource,
+                                     FlakyRangeFetcher, ResilienceReport,
+                                     RestoredCheckpoint,
+                                     SketchJobCheckpointer,
+                                     elastic_distributed_rsvd_streamed,
+                                     partition_rows, sketch_row_range)
 
 # ``stream.range(state)`` per the subsystem spec; range_basis is the
 # shadow-free name.
@@ -49,8 +60,13 @@ __all__ = [
     "svd", "range", "range_basis",
     "TileSource", "ArraySource", "MemmapSource", "DirectorySource",
     "GeneratorSource", "ObjectStoreSource", "FileRangeFetcher",
-    "HttpRangeFetcher", "read_npy_header", "check_shard_name_order",
+    "HttpRangeFetcher", "RetryPolicy", "ShortReadError", "read_npy_header",
+    "check_shard_name_order",
     "as_tile_source", "prefetch", "source_tiles",
     "TuckerSketch", "tucker", "tucker_finalize", "tucker_init",
     "tucker_merge", "tucker_update",
+    "SketchJobCheckpointer", "RestoredCheckpoint", "ResilienceReport",
+    "FaultySource", "FaultInjected", "FlakyRangeFetcher",
+    "partition_rows", "sketch_row_range",
+    "elastic_distributed_rsvd_streamed",
 ]

@@ -28,6 +28,16 @@ Tiles never cross shard boundaries (ragged tails are fine — row tiling is
 free, DESIGN.md §10.2), each ``tiles()`` call is an independent replay,
 and ``stream.prefetch`` overlaps the ranged GETs with sketch compute when
 the driver wraps this source (``stream.source_tiles`` does it by default).
+
+Transient-error policy (DESIGN.md §14): object stores throttle and flake.
+A :class:`RetryPolicy` (bounded attempts, exponential backoff + jitter)
+retries errors that a later attempt can plausibly fix — timeouts,
+connection resets, HTTP 408/429/5xx, short/truncated reads — and gives up
+with a loud ``RuntimeError`` naming the URL and attempt count.  Errors
+that retrying cannot fix — 404/4xx, a server answering 200 instead of
+206, bad magic/dtype/Fortran-order shards — fail loudly on the FIRST
+occurrence: they mean the job is pointed at the wrong data, and ten
+retries would only delay the message.
 """
 
 from __future__ import annotations
@@ -36,10 +46,14 @@ import ast
 import json
 import math
 import posixpath
+import random
+import time
+import urllib.error
 import urllib.parse
 import urllib.request
+from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Iterator, NamedTuple
+from typing import Callable, Iterator, NamedTuple, Optional
 
 import numpy as np
 
@@ -49,10 +63,88 @@ from repro.stream.source import (DEFAULT_TILE_ROWS, TileSource,
 __all__ = [
     "ObjectStoreSource", "FileRangeFetcher", "HttpRangeFetcher",
     "read_npy_header", "MANIFEST_NAME",
+    "RetryPolicy", "ShortReadError", "call_with_retry",
+    "is_transient_fetch_error",
 ]
 
 MANIFEST_NAME = "manifest.json"
 MANIFEST_FORMAT = "repro-shard-manifest"
+
+
+class ShortReadError(ValueError):
+    """A range read returned fewer bytes than requested.
+
+    Subclasses ValueError for backward compatibility with callers that
+    caught the old generic error, but is classified TRANSIENT: truncated
+    bodies are what a dropped connection looks like, and a retry re-reads
+    the full range."""
+
+
+#: HTTP statuses a retry can plausibly fix: request timeout, throttling,
+#: and server-side errors.  4xx other than 408/429 means the request
+#: itself is wrong and will stay wrong.
+TRANSIENT_HTTP_STATUSES = frozenset({408, 429, 500, 502, 503, 504})
+
+
+def is_transient_fetch_error(err: BaseException) -> bool:
+    """Classify a fetch error: True → worth retrying, False → fail now."""
+    if isinstance(err, urllib.error.HTTPError):
+        return err.code in TRANSIENT_HTTP_STATUSES
+    if isinstance(err, (TimeoutError, ConnectionError, ShortReadError)):
+        # socket.timeout is TimeoutError since 3.10
+        return True
+    if isinstance(err, urllib.error.URLError):
+        # connection-level failure (DNS, refused, TLS hiccup); HTTPError
+        # is a subclass but was already classified by status above.
+        return True
+    return False
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded exponential backoff with jitter for transient fetch errors.
+
+    Attempt ``k`` (0-based) sleeps ``min(base_delay * 2**k, max_delay)``
+    scaled by a uniform jitter in ``[1, 1 + jitter]`` — the jitter
+    decorrelates a fleet of workers hammering a throttled store.  After
+    ``max_attempts`` total attempts the caller raises a RuntimeError
+    naming the URL and the attempt count (see :func:`call_with_retry`).
+    """
+
+    max_attempts: int = 4
+    base_delay: float = 0.05
+    max_delay: float = 5.0
+    jitter: float = 0.5
+    sleep: Callable[[float], None] = field(default=time.sleep, repr=False)
+
+    def delay(self, attempt: int) -> float:
+        d = min(self.base_delay * (2.0 ** attempt), self.max_delay)
+        return d * (1.0 + self.jitter * random.random())
+
+
+def call_with_retry(fn: Callable[[], "bytes | int"], *, url: str, what: str,
+                    policy: Optional[RetryPolicy]):
+    """Run ``fn`` under ``policy``: transient errors retry with backoff,
+    permanent errors propagate untouched on the first occurrence, and an
+    exhausted budget raises a loud RuntimeError naming the URL and the
+    attempt count (chained to the last transient error)."""
+    if policy is None:
+        return fn()
+    last: Optional[BaseException] = None
+    for attempt in range(max(1, policy.max_attempts)):
+        try:
+            return fn()
+        except Exception as e:  # noqa: BLE001 — classified below
+            if not is_transient_fetch_error(e):
+                raise
+            last = e
+            if attempt + 1 >= max(1, policy.max_attempts):
+                break
+            policy.sleep(policy.delay(attempt))
+    raise RuntimeError(
+        f"{url}: {what} still failing after {max(1, policy.max_attempts)} "
+        f"attempts (transient-retry budget exhausted); last error: "
+        f"{last!r}") from last
 
 
 class FileRangeFetcher:
@@ -67,9 +159,9 @@ class FileRangeFetcher:
             f.seek(start)
             data = f.read(length)
         if len(data) != length:
-            raise ValueError(f"{url}: short range read — wanted "
-                             f"[{start}, {start + length}) but the file "
-                             f"holds only {start + len(data)} bytes")
+            raise ShortReadError(f"{url}: short range read — wanted "
+                                 f"[{start}, {start + length}) but the file "
+                                 f"holds only {start + len(data)} bytes")
         return data
 
 
@@ -78,36 +170,86 @@ class HttpRangeFetcher:
 
     A server that answers a ranged GET with 200 (full body) instead of 206
     does not support ranges; that raises instead of silently downloading
-    whole objects and pretending to be out-of-core."""
+    whole objects and pretending to be out-of-core.
 
-    def __init__(self, timeout: float = 30.0):
+    Every request — ``size()``'s HEAD as much as ``read()``'s ranged GET —
+    goes through :meth:`_open`, which applies ``self.timeout`` as
+    urllib's connect/read timeout (routing both paths through one helper
+    makes that invariant structural rather than per-call-site).  ``retry``
+    configures the transient-error policy (attempts / base delay /
+    jitter); pass ``retry=None`` to disable retries entirely."""
+
+    def __init__(self, timeout: float = 30.0,
+                 retry: Optional[RetryPolicy] = RetryPolicy()):
         self.timeout = float(timeout)
+        self.retry = retry
+
+    def _open(self, req: urllib.request.Request):
+        return urllib.request.urlopen(req, timeout=self.timeout)
 
     def size(self, url: str) -> int:
-        req = urllib.request.Request(url, method="HEAD")
-        with urllib.request.urlopen(req, timeout=self.timeout) as r:
-            length = r.headers.get("Content-Length")
-        if length is None:
-            raise ValueError(f"{url}: HEAD returned no Content-Length — "
-                             f"cannot size the object")
-        return int(length)
+        def attempt() -> int:
+            req = urllib.request.Request(url, method="HEAD")
+            with self._open(req) as r:
+                length = r.headers.get("Content-Length")
+            if length is None:
+                raise ValueError(f"{url}: HEAD returned no Content-Length "
+                                 f"— cannot size the object")
+            return int(length)
+        return call_with_retry(attempt, url=url, what="HEAD size",
+                               policy=self.retry)
 
     def read(self, url: str, start: int, length: int) -> bytes:
-        req = urllib.request.Request(
-            url, headers={"Range": f"bytes={start}-{start + length - 1}"})
-        with urllib.request.urlopen(req, timeout=self.timeout) as r:
-            status = getattr(r, "status", 206)
-            if status != 206:
-                raise ValueError(
-                    f"{url}: server ignored the Range header (status "
-                    f"{status}) — refusing to download whole objects for "
-                    f"tile reads; serve the shards from a range-capable "
-                    f"store or use DirectorySource on a local copy")
-            data = r.read()
-        if len(data) != length:
-            raise ValueError(f"{url}: short range read — wanted {length} "
-                             f"bytes at offset {start}, got {len(data)}")
-        return data
+        def attempt() -> bytes:
+            req = urllib.request.Request(
+                url,
+                headers={"Range": f"bytes={start}-{start + length - 1}"})
+            with self._open(req) as r:
+                status = getattr(r, "status", 206)
+                if status != 206:
+                    raise ValueError(
+                        f"{url}: server ignored the Range header (status "
+                        f"{status}) — refusing to download whole objects "
+                        f"for tile reads; serve the shards from a "
+                        f"range-capable store or use DirectorySource on a "
+                        f"local copy")
+                data = r.read()
+            if len(data) != length:
+                raise ShortReadError(
+                    f"{url}: short range read — wanted {length} bytes at "
+                    f"offset {start}, got {len(data)}")
+            return data
+        return call_with_retry(
+            attempt, url=url,
+            what=f"range read [{start}, {start + length})",
+            policy=self.retry)
+
+
+class _RetryingFetcher:
+    """Wrap any RangeFetcher with a RetryPolicy + a post-read length check
+    (a backend returning short data without raising becomes a transient
+    ShortReadError and is retried)."""
+
+    def __init__(self, inner, policy: RetryPolicy):
+        self.inner = inner
+        self.policy = policy
+
+    def size(self, url: str) -> int:
+        return call_with_retry(lambda: self.inner.size(url), url=url,
+                               what="size", policy=self.policy)
+
+    def read(self, url: str, start: int, length: int) -> bytes:
+        def attempt() -> bytes:
+            data = self.inner.read(url, start, length)
+            if len(data) != length:
+                raise ShortReadError(
+                    f"{url}: fetcher returned {len(data)} bytes for a "
+                    f"{length}-byte range at offset {start}")
+            return data
+        return call_with_retry(
+            attempt, url=url,
+            what=f"range read [{start}, {start + length})",
+            policy=self.policy)
 
 
 def read_npy_header(fetcher, url: str) -> tuple[tuple, np.dtype, int]:
@@ -179,16 +321,24 @@ class ObjectStoreSource(TileSource):
         the row order — no name-order guessing).
 
     ``fetcher`` overrides backend selection; by default http(s) URLs use
-    :class:`HttpRangeFetcher` and everything else
-    :class:`FileRangeFetcher`.
+    :class:`HttpRangeFetcher` (which retries transient errors with its own
+    default :class:`RetryPolicy`) and everything else
+    :class:`FileRangeFetcher`.  ``retry`` adds a source-level
+    :class:`RetryPolicy` around whatever fetcher is in play — every size
+    and range read (manifest, headers, tiles) retried uniformly, plus a
+    post-read length check; when set, the internally constructed
+    HttpRangeFetcher is created with ``retry=None`` so budgets don't
+    nest multiplicatively.
     """
 
     def __init__(self, location, tile_rows: int = DEFAULT_TILE_ROWS, *,
-                 fetcher=None, pattern: str = "*.npy"):
+                 fetcher=None, pattern: str = "*.npy",
+                 retry: Optional[RetryPolicy] = None):
         if tile_rows < 1:
             raise ValueError(f"tile_rows must be >= 1, got {tile_rows}")
         self.tile_rows = int(tile_rows)
         self._fetcher = fetcher
+        self.retry = retry
         self.shards = self._resolve(location, pattern)
         if not self.shards:
             raise ValueError(f"no shards behind {location!r} (empty list "
@@ -211,9 +361,15 @@ class ObjectStoreSource(TileSource):
     # -- resolution -------------------------------------------------------
 
     def _fetcher_for(self, url: str):
-        if self._fetcher is not None:
-            return self._fetcher
-        return HttpRangeFetcher() if _is_http(url) else FileRangeFetcher()
+        f = self._fetcher
+        if f is None:
+            # with a source-level retry, disable the http fetcher's own
+            # policy — nested budgets would retry max_attempts**2 times
+            f = (HttpRangeFetcher(retry=None if self.retry else RetryPolicy())
+                 if _is_http(url) else FileRangeFetcher())
+        if self.retry is not None:
+            f = _RetryingFetcher(f, self.retry)
+        return f
 
     def _shard_from_header(self, url: str) -> _Shard:
         shape, dtype, off = read_npy_header(self._fetcher_for(url), url)
@@ -279,11 +435,26 @@ class ObjectStoreSource(TileSource):
     # -- tiles ------------------------------------------------------------
 
     def tiles(self) -> Iterator:
+        return self.tiles_from(0)
+
+    def tiles_from(self, start_row: int) -> Iterator:
+        start = self._check_start(start_row)
+
         def gen():
+            pos = 0
             for sh in self.shards:
+                if pos + sh.rows <= start:
+                    pos += sh.rows  # whole shard before the cursor: 0 GETs
+                    continue
+                local = max(start - pos, 0)
+                if local % self.tile_rows:
+                    from repro.stream.source import _not_a_boundary
+                    raise ValueError(_not_a_boundary(
+                        start, pos + local - local % self.tile_rows,
+                        self.tile_rows))
                 fetcher = self._fetcher_for(sh.url)
                 row_bytes = sh.dtype.itemsize * math.prod(sh.trailing)
-                for off in range(0, sh.rows, self.tile_rows):
+                for off in range(local, sh.rows, self.tile_rows):
                     nrows = min(self.tile_rows, sh.rows - off)
                     raw = fetcher.read(sh.url,
                                        sh.data_offset + off * row_bytes,
@@ -292,4 +463,5 @@ class ObjectStoreSource(TileSource):
                     # read buffer (frombuffer on bytes is read-only)
                     arr = np.frombuffer(bytearray(raw), dtype=sh.dtype)
                     yield arr.reshape((nrows,) + sh.trailing)
+                pos += sh.rows
         return gen()

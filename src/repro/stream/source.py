@@ -36,6 +36,7 @@ import math
 import queue
 import re
 import threading
+import warnings
 from pathlib import Path
 from typing import Callable, Iterable, Iterator, Optional, Sequence, Union
 
@@ -44,7 +45,7 @@ import numpy as np
 
 __all__ = [
     "TileSource", "ArraySource", "MemmapSource", "DirectorySource",
-    "GeneratorSource", "as_tile_source", "prefetch",
+    "GeneratorSource", "as_tile_source", "prefetch", "source_tiles",
 ]
 
 DEFAULT_TILE_ROWS = 256
@@ -108,8 +109,53 @@ class TileSource:
     def tiles(self) -> Iterator:
         raise NotImplementedError
 
+    def tiles_from(self, start_row: int) -> Iterator:
+        """Tiles from global row ``start_row`` onward — the resume cursor
+        for checkpointed jobs (DESIGN.md §14).
+
+        Contract: the yielded tiles are exactly the suffix of ``tiles()``
+        that starts at ``start_row``, with identical tile boundaries — so a
+        resumed sketch replays bit-identically.  ``start_row`` must land on
+        a tile boundary of this source's tiling; anything else raises
+        ValueError (a mid-tile cursor cannot reproduce the boundaries).
+
+        This base implementation iterates ``tiles()`` and discards the
+        prefix — correct for any source, but it still pays the skipped
+        tiles' IO.  Disk/object-store sources override it to seek.
+        """
+        start = self._check_start(start_row)
+        if start == 0:
+            return self.tiles()
+
+        def gen():
+            off = 0
+            for tile in self.tiles():
+                b = int(tile.shape[0])
+                if off < start:
+                    if off + b > start:
+                        raise ValueError(_not_a_boundary(start, off, b))
+                    off += b
+                    continue
+                yield tile
+                off += b
+        return gen()
+
+    def _check_start(self, start_row: int) -> int:
+        start = int(start_row)
+        if not 0 <= start <= self.n_rows:
+            raise ValueError(f"start_row={start} out of range for a source "
+                             f"with {self.n_rows} rows")
+        return start
+
     def __iter__(self) -> Iterator:
         return self.tiles()
+
+
+def _not_a_boundary(start: int, off: int, width: int) -> str:
+    return (f"start_row={start} is not a tile boundary (falls inside the "
+            f"tile covering rows [{off}, {off + width})) — resume cursors "
+            f"must land exactly between tiles so the replayed suffix keeps "
+            f"the original tile boundaries")
 
 
 def _chunk(array, tile_rows: int) -> Iterator:
@@ -134,6 +180,13 @@ class ArraySource(TileSource):
     def tiles(self) -> Iterator:
         return _chunk(self._array, self.tile_rows)
 
+    def tiles_from(self, start_row: int) -> Iterator:
+        start = self._check_start(start_row)
+        if start % self.tile_rows and start != self.n_rows:
+            raise ValueError(_not_a_boundary(
+                start, start - start % self.tile_rows, self.tile_rows))
+        return _chunk(self._array[start:], self.tile_rows)
+
 
 class MemmapSource(TileSource):
     """An ``.npy`` file on disk, memory-mapped: each ``tiles()`` replay
@@ -155,10 +208,17 @@ class MemmapSource(TileSource):
         del header
 
     def tiles(self) -> Iterator:
+        return self.tiles_from(0)
+
+    def tiles_from(self, start_row: int) -> Iterator:
+        start = self._check_start(start_row)
+        if start % self.tile_rows and start != self.n_rows:
+            raise ValueError(_not_a_boundary(
+                start, start - start % self.tile_rows, self.tile_rows))
         mm = np.load(self.path, mmap_mode="r")
 
         def gen():
-            for off in range(0, mm.shape[0], self.tile_rows):
+            for off in range(start, mm.shape[0], self.tile_rows):
                 # np.array COPIES the tile (np.asarray on a memmap slice
                 # shares memory!) so the disk page-in happens here, in the
                 # prefetch thread — a lazy view would page inside the
@@ -188,6 +248,7 @@ class DirectorySource(TileSource):
             raise ValueError(f"no {pattern} shards in {self.path}")
         check_shard_name_order([f.name for f in self.files])
         rows, trailing = 0, None
+        self.shard_rows: list[int] = []
         for f in self.files:
             hdr = np.load(f, mmap_mode="r")
             if hdr.ndim < 2:
@@ -200,16 +261,32 @@ class DirectorySource(TileSource):
                     f"shard {f.name} has trailing shape {hdr.shape[1:]}, "
                     f"expected {trailing} (all shards must agree)")
             rows += hdr.shape[0]
+            self.shard_rows.append(int(hdr.shape[0]))
             del hdr
         self.shape = (rows,) + tuple(int(s) for s in trailing)
 
     def tiles(self) -> Iterator:
+        return self.tiles_from(0)
+
+    def tiles_from(self, start_row: int) -> Iterator:
+        start = self._check_start(start_row)
+
         def gen():
-            for f in self.files:
+            pos = 0
+            for f, rows in zip(self.files, self.shard_rows):
+                if pos + rows <= start:
+                    pos += rows  # whole shard before the cursor: no IO
+                    continue
+                local = max(start - pos, 0)
+                if local % self.tile_rows:
+                    raise ValueError(_not_a_boundary(
+                        start, pos + local - local % self.tile_rows,
+                        self.tile_rows))
                 mm = np.load(f, mmap_mode="r")
-                for off in range(0, mm.shape[0], self.tile_rows):
+                for off in range(local, rows, self.tile_rows):
                     # np.array copies (asarray would share the mmap view)
                     yield np.array(mm[off:off + self.tile_rows])
+                pos += rows
         return gen()
 
 
@@ -324,7 +401,7 @@ _DONE = object()
 
 
 def prefetch(tiles: Iterable, depth: int = 1, *,
-             to_device: bool = True) -> Iterator:
+             to_device: bool = True, join_timeout: float = 5.0) -> Iterator:
     """Double-buffered async prefetch over a tile iterator.
 
     A daemon reader thread pulls tiles (host IO: memmap page-in, shard
@@ -337,7 +414,11 @@ def prefetch(tiles: Iterable, depth: int = 1, *,
 
     Reader exceptions are re-raised at the consumer's next pull; closing the
     generator early (e.g. breaking out of the loop) unblocks and stops the
-    reader.
+    reader, which is then joined for up to ``join_timeout`` seconds — if it
+    is still alive after that (a fetcher hung inside a read, past the
+    ``put_or_stop`` escape hatch), a RuntimeWarning is emitted naming the
+    thread: that thread may pin its in-flight tile (possibly on device) for
+    the rest of the process.
     """
     if depth < 1:
         raise ValueError(f"prefetch depth must be >= 1, got {depth}")
@@ -387,13 +468,22 @@ def prefetch(tiles: Iterable, depth: int = 1, *,
             yield item
     finally:
         stop.set()
+        t.join(timeout=join_timeout)
+        if t.is_alive():
+            warnings.warn(
+                f"prefetch reader thread {t.name!r} did not exit within "
+                f"{join_timeout}s of the consumer closing — it is likely "
+                f"hung inside the tile source (fetcher stall?) and may pin "
+                f"an in-flight tile for the process lifetime",
+                RuntimeWarning, stacklevel=2)
 
 
 def source_tiles(src: TileSource, *, prefetch_depth: Optional[int] = 1,
-                 to_device: bool = True) -> Iterator:
+                 to_device: bool = True, start_row: int = 0) -> Iterator:
     """One pass over ``src``'s tiles, prefetched unless
-    ``prefetch_depth is None``."""
-    it = src.tiles()
+    ``prefetch_depth is None``.  ``start_row`` resumes mid-stream at a tile
+    boundary (see :meth:`TileSource.tiles_from`)."""
+    it = src.tiles_from(start_row) if start_row else src.tiles()
     if prefetch_depth is None:
         return iter(it)
     return prefetch(it, depth=prefetch_depth, to_device=to_device)

@@ -13,21 +13,24 @@ Guarantees:
   * reshard-on-restore — restore(..., mesh, specs) device_puts every leaf
     with the *target* sharding, so a checkpoint written on one mesh restores
     onto any other (elastic re-scale path; tested 1 <-> 8 devices).
+
+The tmp-then-replace and async-writer machinery lives in
+``repro._atomic_io`` and is shared with the sketch-job checkpointer
+(``stream/resilience.py``); this module only knows the step_<N> layout.
 """
 
 from __future__ import annotations
 
 import json
-import os
-import queue
 import shutil
-import threading
 import time
 from pathlib import Path
 from typing import Any, Optional
 
 import jax
 import numpy as np
+
+from repro._atomic_io import AsyncWriter, atomic_write_dir
 
 
 def _flatten(tree, prefix="") -> dict[str, Any]:
@@ -54,24 +57,19 @@ class CheckpointManager:
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
-        self._q: queue.Queue = queue.Queue()
-        self._err: Optional[BaseException] = None
-        self._thread = threading.Thread(target=self._worker, daemon=True)
-        self._thread.start()
+        self._writer = AsyncWriter(name="repro-train-ckpt")
 
     # -- public API ---------------------------------------------------------
 
     def save(self, step: int, tree: dict, blocking: bool = False) -> None:
         """Enqueue an async save of a pytree (params/opt/anything)."""
         flat = {k: np.asarray(v) for k, v in _flatten(tree).items()}
-        self._q.put((step, flat))
+        self._writer.submit(lambda: self._write(step, flat))
         if blocking:
             self.wait()
 
     def wait(self) -> None:
-        self._q.join()
-        if self._err:
-            raise RuntimeError("async checkpoint writer failed") from self._err
+        self._writer.wait()
 
     def latest_step(self) -> Optional[int]:
         steps = [int(p.name.split("_")[1]) for p in self.dir.glob("step_*")
@@ -111,34 +109,23 @@ class CheckpointManager:
     def close(self) -> None:
         self.wait()
 
-    # -- writer thread ------------------------------------------------------
+    # -- writer-thread body --------------------------------------------------
 
-    def _worker(self) -> None:
-        while True:
-            step, flat = self._q.get()
-            try:
-                tmp = self.dir / f"step_{step}.tmp"
-                final = self.dir / f"step_{step}"
-                if tmp.exists():
-                    shutil.rmtree(tmp)
-                tmp.mkdir(parents=True)
-                for k, v in flat.items():
-                    np.save(tmp / (k.replace("/", "__") + ".npy"), v)
-                manifest = {
-                    "step": step,
-                    "time": time.time(),
-                    "keys": {k: [list(v.shape), str(v.dtype)]
-                             for k, v in flat.items()},
-                }
-                (tmp / "manifest.json").write_text(json.dumps(manifest))
-                if final.exists():
-                    shutil.rmtree(final)
-                os.replace(tmp, final)
-                self._gc()
-            except BaseException as e:  # surfaced on next wait()
-                self._err = e
-            finally:
-                self._q.task_done()
+    def _write(self, step: int, flat: dict[str, np.ndarray]) -> None:
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "keys": {k: [list(v.shape), str(v.dtype)]
+                     for k, v in flat.items()},
+        }
+
+        def write_arrays(tmp: Path) -> None:
+            for k, v in flat.items():
+                np.save(tmp / (k.replace("/", "__") + ".npy"), v)
+
+        atomic_write_dir(self.dir / f"step_{step}", write_arrays,
+                         manifest=manifest)
+        self._gc()
 
     def _gc(self) -> None:
         steps = sorted(int(p.name.split("_")[1])
