@@ -1,0 +1,263 @@
+"""Serving benchmark: dense vs compressed-KV continuous batching at a
+matched HBM budget (DESIGN.md §15).
+
+The claim this bench exists to land: at the SAME swappable-KV byte budget,
+compressed slots sustain strictly more concurrent streams AND higher
+aggregate tokens/sec than dense slots — compression buys concurrency, not
+just bytes.  Both modes replay the identical seeded Poisson trace
+(serve/loadgen.py) through the scheduler (serve/scheduler.py) on the same
+model params; admission is capped at budget // per-stream worst-case bytes
+(models/cache.kv_stream_bytes), which is where the byte savings turn into
+stream count.
+
+All SLO numbers (TTFT/TPOT, p50/p99 latency, aggregate tokens/sec, queue
+depth) come from the deterministic virtual clock (StepCostModel), so the
+records — and the CI `--smoke-serve` assertions on them — are exact across
+machines.  Wall-clock seconds are recorded separately as information (this
+container runs Pallas in interpret mode on CPU; wall numbers are
+structural, the modeled numbers are the load-bearing ones).
+
+Side effect: writes BENCH_serve.json at the repo root (the acceptance
+artifact; BENCH_stream.json's `kv_serving` row now just points here).
+``python -m benchmarks.serve_bench --smoke`` runs the seconds-scale CI
+variant and asserts the compressed-vs-dense win, a p99 ceiling, replayed-
+trace determinism, and zero dropped-but-unreported requests.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+import time
+
+import jax
+
+from benchmarks.common import row
+from repro.configs.base import smoke_config
+from repro.models import cache as cache_mod
+from repro.models import registry as R
+from repro.models import transformer as T
+from repro.serve import loadgen
+from repro.serve.model_step import ModelStep
+from repro.serve.scheduler import Scheduler
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_serve.json")
+
+# smoke-profile knobs (seconds-scale; CI asserts on these exact numbers)
+SMOKE = dict(arch="qwen3-0.6b", slots=6, max_seq=96, rank=2, ratio=2.0,
+             prefill_chunk=6, max_queue=64, budget_dense_streams=2,
+             n_requests=18, arrival_rate=250.0, seed=42)
+# full-profile knobs (minutes-scale, hundreds of requests)
+FULL = dict(arch="qwen3-0.6b", slots=8, max_seq=192, rank=4, ratio=2.0,
+            prefill_chunk=8, max_queue=400, budget_dense_streams=4,
+            n_requests=300, arrival_rate=400.0, seed=42)
+
+
+def _model(knobs: dict, compressed: bool):
+    cfg = smoke_config(R.get_arch(knobs["arch"]))
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    kw = dict(slots=knobs["slots"], max_seq=knobs["max_seq"])
+    if compressed:
+        kw.update(kv_sketch_rank=knobs["rank"],
+                  kv_compress_ratio=knobs["ratio"])
+    return cfg, ModelStep(cfg, params, **kw)
+
+
+def run_mode(knobs: dict, trace, *, compressed: bool,
+             hbm_budget: int) -> dict:
+    """Replay ``trace`` through one scheduler mode; returns the record."""
+    cfg, model = _model(knobs, compressed)
+    sch = Scheduler(model, max_queue=knobs["max_queue"],
+                    prefill_chunk=knobs["prefill_chunk"],
+                    hbm_budget=hbm_budget)
+    t0 = time.perf_counter()
+    sch.run(trace)
+    wall_s = time.perf_counter() - t0
+    s = sch.metrics.summary(expected=len(trace))
+    return {
+        "kind": "serve", "mode": "compressed" if compressed else "dense",
+        "arch": cfg.name, "slots": knobs["slots"],
+        "max_seq": knobs["max_seq"],
+        "rank": knobs["rank"] if compressed else None,
+        "compress_ratio": knobs["ratio"] if compressed else None,
+        "prefill_chunk": knobs["prefill_chunk"],
+        "max_queue": knobs["max_queue"],
+        "hbm_budget_bytes": hbm_budget,
+        "stream_bound_bytes": sch.stream_bound,
+        "max_streams": sch.max_streams,
+        "n_requests": len(trace),
+        "wall_s": round(wall_s, 3),       # info only; SLOs are virtual-time
+        **{k: (round(v, 6) if isinstance(v, float) else v)
+           for k, v in s.items() if k not in ("hbm", "accounting")},
+        "hbm": s["hbm"],
+        "accounting": s["accounting"],
+    }
+
+
+def _check_accounting(rec: dict) -> None:
+    acct = rec["accounting"]
+    assert acct["unaccounted"] == 0, acct
+    assert acct["in_flight"] == 0, acct
+    assert acct["rejected"] + acct["completed"] == acct["attempted"], acct
+
+
+def serve_rows(knobs: dict, records=None) -> list:
+    """The dense-vs-compressed comparison at one matched HBM budget, off a
+    seeded trace that round-trips through a replayable trace file."""
+    cfg = smoke_config(R.get_arch(knobs["arch"]))
+    dense_bound = cache_mod.kv_stream_bytes(cfg, knobs["max_seq"])
+    budget = knobs["budget_dense_streams"] * dense_bound
+
+    trace = loadgen.generate_trace(
+        knobs["seed"], knobs["n_requests"], knobs["arrival_rate"],
+        vocab=cfg.vocab)
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "trace.json")
+        loadgen.save_trace(trace, path, meta={"seed": knobs["seed"]})
+        replayed = loadgen.load_trace(path)
+    assert replayed == trace, "trace file round-trip is not identity"
+
+    dense = run_mode(knobs, replayed, compressed=False, hbm_budget=budget)
+    comp = run_mode(knobs, replayed, compressed=True, hbm_budget=budget)
+    for rec in (dense, comp):
+        _check_accounting(rec)
+
+    compare = {
+        "kind": "serve_compare", "arch": cfg.name,
+        "hbm_budget_bytes": budget,
+        "budget_dense_streams": knobs["budget_dense_streams"],
+        "dense_max_streams": dense["max_streams"],
+        "compressed_max_streams": comp["max_streams"],
+        "dense_tokens_per_s": dense["tokens_per_s"],
+        "compressed_tokens_per_s": comp["tokens_per_s"],
+        "throughput_gain": round(
+            comp["tokens_per_s"] / dense["tokens_per_s"], 4)
+        if dense["tokens_per_s"] else None,
+        "dense_latency_p99_s": dense["latency_p99_s"],
+        "compressed_latency_p99_s": comp["latency_p99_s"],
+        "dense_ttft_p99_s": dense["ttft_p99_s"],
+        "compressed_ttft_p99_s": comp["ttft_p99_s"],
+        "concurrency_win": comp["max_streams"] > dense["max_streams"],
+        "throughput_win": comp["tokens_per_s"] > dense["tokens_per_s"],
+    }
+    if records is not None:
+        records.extend([dense, comp, compare])
+    return [
+        row(f"serve.dense.s{dense['max_streams']}", dense["wall_s"] * 1e6,
+            f"tok_per_s={dense['tokens_per_s']:.1f};"
+            f"p50={dense['latency_p50_s']:.4f}s;"
+            f"p99={dense['latency_p99_s']:.4f}s;"
+            f"ttft_p99={dense['ttft_p99_s']:.4f}s"),
+        row(f"serve.compressed.s{comp['max_streams']}", comp["wall_s"] * 1e6,
+            f"tok_per_s={comp['tokens_per_s']:.1f};"
+            f"p50={comp['latency_p50_s']:.4f}s;"
+            f"p99={comp['latency_p99_s']:.4f}s;"
+            f"ttft_p99={comp['ttft_p99_s']:.4f}s"),
+        row("serve.compare", 0.0,
+            f"streams={dense['max_streams']}->{comp['max_streams']};"
+            f"tok_gain={compare['throughput_gain']}x;"
+            f"budget={budget}"),
+    ]
+
+
+def backpressure_rows(knobs: dict, records=None) -> list:
+    """Bounded-queue satellite: flood a max_queue=2 scheduler faster than
+    it drains; rejects must be counted in the metrics (loud backpressure,
+    nothing silently dropped) and the queue never exceeds its bound."""
+    _, model = _model(knobs, False)
+    sch = Scheduler(model, max_queue=2,
+                    prefill_chunk=knobs["prefill_chunk"])
+    n = model.slots + 8
+    accepted = sum(sch.submit(i, [1 + (i % 9), 2, 3], 4) for i in range(n))
+    assert accepted < n, "queue bound never engaged"
+    assert len(sch.queue) <= 2
+    while sch.step():
+        pass
+    acct = sch.metrics.accounting(n)
+    assert acct["unaccounted"] == 0, acct
+    assert acct["rejected"] == n - accepted > 0, acct
+    assert acct["completed"] == accepted, acct
+    rec = {"kind": "serve_backpressure", "max_queue": 2, "offered": n,
+           "accepted": accepted, "rejected": acct["rejected"],
+           "reject_depths": [r["queue_depth"]
+                             for r in sch.metrics.rejected[:4]]}
+    if records is not None:
+        records.append(rec)
+    return [row("serve.backpressure", 0.0,
+                f"offered={n};accepted={accepted};"
+                f"rejected={acct['rejected']};bound=2")]
+
+
+def _write_bench(records) -> None:
+    with open(BENCH_JSON, "w") as f:
+        json.dump(records, f, indent=1)
+
+
+def run() -> list:
+    records = []
+    rows = (serve_rows(FULL, records=records)
+            + backpressure_rows(FULL, records=records))
+    for r in records:
+        r["profile"] = "full"
+    _write_bench(records)
+    rows.append(row("serve.bench_json.written", 0.0, BENCH_JSON))
+    return rows
+
+
+def smoke() -> None:
+    """CI `--smoke-serve`: seconds-scale trace, deterministic assertions —
+    the compressed-vs-dense concurrency AND throughput win at a matched
+    budget, p99 latency under the ceiling, bit-identical summaries across
+    a replay, and zero dropped-but-unreported requests."""
+    records = []
+    serve_rows(SMOKE, records=records)
+    backpressure_rows(SMOKE, records=records)
+    dense = next(r for r in records if r.get("mode") == "dense")
+    comp = next(r for r in records if r.get("mode") == "compressed")
+    compare = next(r for r in records if r["kind"] == "serve_compare")
+
+    # the headline: same budget, strictly more streams, more tokens/sec —
+    # and the extra streams were actually USED (measured concurrency, not
+    # just the admission cap)
+    assert compare["concurrency_win"], compare
+    assert compare["throughput_win"], compare
+    assert comp["concurrency_max"] > dense["concurrency_max"], \
+        (comp["concurrency_max"], dense["concurrency_max"])
+    # SLO ceiling on the deterministic virtual clock (observed 0.046s;
+    # ceiling leaves ~4x headroom for knob drift without hiding a real
+    # scheduling regression)
+    P99_CEILING_S = 0.2
+    assert comp["latency_p99_s"] < P99_CEILING_S, comp["latency_p99_s"]
+    # replay determinism: the same seed must reproduce the summary exactly
+    records2 = []
+    serve_rows(SMOKE, records=records2)
+    comp2 = next(r for r in records2 if r.get("mode") == "compressed")
+    for k in ("tokens_per_s", "latency_p50_s", "latency_p99_s",
+              "ttft_p50_s", "ttft_p99_s", "completed", "max_streams"):
+        assert comp[k] == comp2[k], (k, comp[k], comp2[k])
+
+    for r in records:
+        r["profile"] = "smoke"
+    _write_bench(records)
+    print(f"serve smoke OK: budget {compare['hbm_budget_bytes']}B -> "
+          f"{compare['dense_max_streams']} dense vs "
+          f"{compare['compressed_max_streams']} compressed streams, "
+          f"tokens/sec {compare['dense_tokens_per_s']:.1f} -> "
+          f"{compare['compressed_tokens_per_s']:.1f} "
+          f"({compare['throughput_gain']}x), compressed p99 "
+          f"{comp['latency_p99_s']:.4f}s < {P99_CEILING_S}s, "
+          f"rejected-but-reported "
+          f"{next(r for r in records if r['kind'] == 'serve_backpressure')['rejected']}, "
+          f"unaccounted 0 -> {BENCH_JSON}")
+
+
+if __name__ == "__main__":
+    jax.config.update("jax_platform_name", "cpu")
+    if "--smoke" in sys.argv:
+        smoke()
+    else:
+        from benchmarks.common import print_rows
+        print_rows(run())

@@ -2,6 +2,12 @@
 
     PYTHONPATH=src python examples/serve_llm.py --arch qwen3-0.6b --requests 6
 
+Open-loop load (scheduler path, DESIGN.md §15): add ``--arrival-rate 200``
+for seeded Poisson arrivals through serve/scheduler.py — chunked prefill,
+bounded queue, catch-up admission — with the SLO summary table printed at
+the end (``--report out.json`` writes it as JSON, ``--load-trace`` replays
+a saved trace byte-for-byte).
+
 Compressed-attention variant (DESIGN.md §12): add ``--kv-rank 4
 --kv-compress-ratio 2`` and the engine swaps each slot's dense KV prefix for
 rank-4 factors once it holds 8+ uncompressed rows, attending through the
@@ -9,6 +15,7 @@ factors from then on; the summary line reports the per-slot HBM savings.
 """
 
 import argparse
+import json
 import time
 
 import jax
@@ -16,21 +23,41 @@ import jax
 from repro.configs.base import smoke_config
 from repro.models import registry as R
 from repro.models import transformer as T
+from repro.serve import loadgen
 from repro.serve.engine import Engine, Request
+from repro.serve.metrics import format_slo_table
+from repro.serve.model_step import ModelStep
+from repro.serve.scheduler import Scheduler
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-0.6b")
-    ap.add_argument("--requests", type=int, default=6)
-    ap.add_argument("--slots", type=int, default=3)
-    ap.add_argument("--max-new", type=int, default=8)
-    ap.add_argument("--kv-rank", type=int, default=None)
-    ap.add_argument("--kv-compress-ratio", type=float, default=None)
-    args = ap.parse_args()
+def run_scheduler(args, cfg, params):
+    model = ModelStep(cfg, params, slots=args.slots, max_seq=128,
+                      kv_sketch_rank=args.kv_rank,
+                      kv_compress_ratio=args.kv_compress_ratio)
+    sch = Scheduler(model, max_queue=args.max_queue,
+                    prefill_chunk=args.prefill_chunk)
+    if args.load_trace:
+        trace = loadgen.load_trace(args.load_trace)
+    else:
+        trace = loadgen.generate_trace(0, args.requests, args.arrival_rate,
+                                       vocab=cfg.vocab)
+    t0 = time.time()
+    sch.run(trace)
+    wall = time.time() - t0
+    summary = sch.metrics.summary(expected=len(trace))
+    print(f"arch={cfg.name} slots={args.slots}: scheduler drained "
+          f"{len(trace)} requests in {wall:.2f}s wall")
+    print("SLO summary (virtual-clock):")
+    print(format_slo_table(summary))
+    for q in sch.finished[:4]:
+        print(f"  req{q.rid}: prompt[:4]={q.prompt[:4]} -> out={q.out}")
+    if args.report:
+        with open(args.report, "w") as f:
+            json.dump({"wall_s": wall, "summary": summary}, f, indent=1)
+        print(f"report -> {args.report}")
 
-    cfg = smoke_config(R.get_arch(args.arch))
-    params = T.init_params(cfg, jax.random.PRNGKey(0))
+
+def run_engine(args, cfg, params):
     eng = Engine(cfg, params, slots=args.slots, max_seq=128,
                  kv_sketch_rank=args.kv_rank,
                  kv_compress_ratio=args.kv_compress_ratio)
@@ -57,6 +84,32 @@ def main():
                   f"{r['dense_bytes']} B ({r['ratio']:.2f}x)")
     for r in reqs:
         print(f"  req{r.rid}: prompt={r.prompt} -> out={r.out}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--kv-rank", type=int, default=None)
+    ap.add_argument("--kv-compress-ratio", type=float, default=None)
+    ap.add_argument("--arrival-rate", type=float, default=None,
+                    help="drive the scheduler with Poisson arrivals (req/s)")
+    ap.add_argument("--load-trace", default=None,
+                    help="replay a saved loadgen trace file")
+    ap.add_argument("--report", default=None,
+                    help="write the SLO summary as JSON")
+    ap.add_argument("--max-queue", type=int, default=64)
+    ap.add_argument("--prefill-chunk", type=int, default=6)
+    args = ap.parse_args()
+
+    cfg = smoke_config(R.get_arch(args.arch))
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    if args.load_trace or args.arrival_rate is not None:
+        run_scheduler(args, cfg, params)
+    else:
+        run_engine(args, cfg, params)
 
 
 if __name__ == "__main__":

@@ -147,3 +147,41 @@ def cache_bytes(cfg: ModelCfg, batch: int, seq: int) -> int:
                 n *= s
             total += n * jnp.dtype(dt).itemsize
     return total
+
+
+def kv_stream_bytes(cfg: ModelCfg, seq: int, *, rank: int = None,
+                    tail_rows: int = None) -> int:
+    """Worst-case swappable-KV bytes ONE stream holds live at history length
+    ``seq`` — the per-stream bound the scheduler's compression-aware
+    admission and serve_bench's capacity plans divide an HBM budget by
+    (DESIGN.md §15).  Only the leaves a compression swap can shrink count:
+    full-context attention k/v (the ``_factor_defs`` eligibility — windowed
+    rings are already O(window), MLA latents and recurrent state are not
+    swappable), so dense and compressed bounds are compared over the same
+    byte population.
+
+    Dense mode (``rank=None``): every row bf16-dense -> seq rows per leaf.
+    Compressed mode: at most ``tail_rows`` dense rows (the threshold the
+    auto-compress trigger lets a tail grow to, plus however many rows can
+    land before the next trigger check — callers pass threshold + chunk)
+    plus f32 factors (us (seq, r) + vt (r, hd); same arithmetic as
+    serve.kv_compress.factor_bytes, inlined here because importing it would
+    cycle through serve/__init__ -> engine -> models.cache)."""
+    total = 0
+    for spec in cfg.layer_specs():
+        if spec.mixer != "attn" or (spec.window is not None
+                                    and spec.window < seq):
+            continue
+        per_head_rows = cfg.head_dim * jnp.dtype(jnp.bfloat16).itemsize
+        if rank is None:
+            rows = seq
+            fact = 0
+        else:
+            if tail_rows is None:
+                raise ValueError("compressed kv_stream_bytes needs "
+                                 "tail_rows (threshold + prefill chunk)")
+            rows = min(seq, tail_rows)
+            fact = (seq * rank + rank * cfg.head_dim) * 4
+        # k and v leaves, n_kv_heads each
+        total += 2 * cfg.n_kv_heads * (rows * per_head_rows + fact)
+    return total

@@ -1,1 +1,2 @@
-from repro.serve import engine, kv_compress
+from repro.serve import (engine, kv_compress, loadgen, metrics, model_step,
+                         scheduler)

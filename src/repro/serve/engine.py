@@ -4,39 +4,38 @@ A request enters a free slot, gets prefilled (cache written at its slot), and
 then joins the batched decode step; finished requests free their slot for the
 next queue entry.  All jit'd shapes are static: (slots, max_seq).
 
-Includes the beyond-paper KV-cache compression path (serve/kv_compress.py,
-DESIGN.md §12).  With ``kv_sketch_rank`` set, the engine maintains
-**incremental** per-slot streaming sketches (repro.stream): every appended
-token updates the sketch in O(1·d·p) instead of redecomposing the whole
-cache — bit-identical to a full recompute over the same appended rows
-(DESIGN.md §10) — and sliding-window layers get ROLLING sketches whose ring
-eviction mirrors the cache's own ring buffer (stream/rolling.py).
+This module is now the thin request-lifecycle facade over the model-step
+layer (serve/model_step.py): ``Engine`` inherits every tensor primitive —
+masked slot prefill, batched decode, the incremental per-slot streaming
+sketches (repro.stream; bit-identical to a full recompute over the same
+appended rows, DESIGN.md §10/§12), rolling sketches for sliding-window
+layers, FactoredKV swaps and the ``kv_slot_bytes``/``kv_bytes_report`` HBM
+accounting — and adds only the queue, slot assignment and the decode loop.
 
-With ``kv_compress_ratio`` additionally set the engine ACTS on the
-sketches: once a slot's uncompressed dense span reaches
-``ratio · rank`` rows, ``compress_slot`` swaps those rows for the rank-r
-``FactoredKV`` produced by the sketch (zeroing the dense rows), decode
-attends to the compressed prefix via ``factored_scores``-style skinny GEMMs
-(models/layers.factored_decode_attention) while new tokens append to a small
-dense tail, and the slot re-compresses whenever the tail outgrows the
-threshold again.  ``kv_slot_bytes`` reports the per-slot HBM story (dense
-equivalent vs factored + tail).
+The Engine keeps the pre-split behavior exactly (whole-prompt prefill at
+admit, uniform slot clock writing decode rows at max(pos), so slots admitted
+mid-stream go non-contiguous and never compress — DESIGN.md §12.1).  The
+production serving path is ``serve/scheduler.py``: chunked prefill under a
+token budget, catch-up decode keeping every slot contiguous (hence
+compressible under churn), compression-aware admission and SLO metrics
+(DESIGN.md §15).
+
+``submit`` enforces a bounded queue: past ``max_queue`` waiting requests it
+raises ``QueueFullError`` (serve/scheduler.py) carrying the queue depth, so
+overload surfaces as loud backpressure instead of unbounded memory growth.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Callable, Optional
+from typing import Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelCfg
-from repro.models import cache as cache_mod
-from repro.models import registry as R
-from repro.serve import kv_compress
+from repro.serve.model_step import ModelStep
+from repro.serve.scheduler import QueueFullError
 
 
 @dataclasses.dataclass
@@ -48,444 +47,30 @@ class Request:
     done: bool = False
 
 
-class Engine:
+class Engine(ModelStep):
     def __init__(self, cfg: ModelCfg, params, *, slots: int = 4,
                  max_seq: int = 256, temperature: float = 0.0,
                  sample_seed: int = 0, kv_sketch_rank: Optional[int] = None,
                  kv_sketch_seed: int = 7,
-                 kv_compress_ratio: Optional[float] = None):
-        self.cfg = cfg
-        self.params = params
-        self.slots = slots
-        self.max_seq = max_seq
-        self.temperature = temperature
-        self.key = jax.random.PRNGKey(sample_seed)
-        self.cache = cache_mod.build_cache(cfg, slots, max_seq)
-        self.pos = np.zeros(slots, np.int32)       # next write position
+                 kv_compress_ratio: Optional[float] = None,
+                 max_queue: int = 1024):
+        super().__init__(cfg, params, slots=slots, max_seq=max_seq,
+                         temperature=temperature, sample_seed=sample_seed,
+                         kv_sketch_rank=kv_sketch_rank,
+                         kv_sketch_seed=kv_sketch_seed,
+                         kv_compress_ratio=kv_compress_ratio)
+        if max_queue < 1:
+            raise ValueError(f"max_queue={max_queue} must be >= 1")
+        self.max_queue = max_queue
         self.active: list[Optional[Request]] = [None] * slots
         self.queue: list[Request] = []
-        self.last_logits: Optional[jax.Array] = None  # last decode step's
-        self._decode = jax.jit(R.make_serve_step(cfg))
-        self._prefill_one = jax.jit(self._make_slot_prefill())
-        # incremental KV compression (serve/kv_compress.py): per-slot,
-        # per-cache-leaf streaming sketch states, appended as tokens land.
-        self.kv_sketch_rank = kv_sketch_rank
-        self._kv_key = jax.random.PRNGKey(kv_sketch_seed)
-        self._kv_paths, self._kv_roll_paths = (
-            self._find_kv_paths() if kv_sketch_rank else ([], []))
-        self._kv_sketches: list[Optional[dict]] = [None] * slots
-        # contiguous [start, count] span of cache rows not yet absorbed into
-        # the sketches — decode only extends the span; the actual update
-        # GEMMs run batched every _KV_FLUSH tokens or on kv_factors(), so
-        # the jit'd decode hot loop pays no per-token sketch dispatch.
-        self._kv_pending: list[Optional[list]] = [None] * slots
-        self._kv_flush_every = 16
-        # append-only watchdog: the uniform slot clock writes decode rows at
-        # write_pos = max(pos), so a slot admitted while others are mid-
-        # stream gets its rows at offsets beyond its own pos — a gap the
-        # sketch never streams.  Such histories must not compress (comp_len
-        # would diverge from the sketch high-water; DESIGN.md §12.1).
-        self._kv_next_row = np.zeros(slots, np.int64)
-        self._kv_contig = [True] * slots
-        # acting on the sketches (DESIGN.md §12): swap dense prefixes for
-        # FactoredKV once the uncompressed span crosses ratio*rank rows.
-        self.kv_compress_ratio = kv_compress_ratio
-        self._kv_comp_len = np.zeros(slots, np.int32)
-        self._kv_swap_paths = [p for p in self._kv_paths
-                               if p[2] in ("k", "v")]
-        self.kv_fact = None
-        if kv_compress_ratio is not None:
-            if not kv_sketch_rank:
-                raise ValueError("kv_compress_ratio requires kv_sketch_rank")
-            if kv_compress_ratio < 1.0:
-                raise ValueError(f"kv_compress_ratio={kv_compress_ratio} "
-                                 f"must be >= 1 (rows per factor rank)")
-            if not self._kv_swap_paths:
-                raise ValueError(
-                    f"{cfg.name} has no full-context attention k/v leaves "
-                    f"to compress (MLA latents / window-only stacks are not "
-                    f"swappable — DESIGN.md §12)")
-            self._kv_threshold = max(
-                int(math.ceil(kv_compress_ratio * kv_sketch_rank)), 1)
-            # a swap needs >= p streamed rows so Q's unseen rows (and hence
-            # the factored prefix beyond comp_len) are exactly zero
-            self._kv_min_rows = kv_compress._sketch_width(
-                kv_sketch_rank, cfg.head_dim)
-            self.kv_fact = cache_mod.build_kv_factors(
-                cfg, slots, max_seq, kv_sketch_rank)
-
-    # -- incremental KV sketching ------------------------------------------
-    def _find_kv_paths(self) -> tuple[list, list]:
-        """KV leaves of the cache eligible for incremental sketching, split
-        by stream model: full-context attention k/v and MLA latent ckv/kr
-        are append-only (linear SketchState); sliding-window k/v leaves
-        (seq axis == window < max_seq) overwrite rows, so they get rolling
-        sketches whose ring mirrors the cache ring (stream/rolling.py).
-        Cross-attention histories stay skipped: static, nothing streams."""
-        linear, rolling = [], []
-        def classify(group, i, name, leaf):
-            if name in ("k", "v"):
-                if leaf.shape[-3] == self.max_seq:
-                    linear.append((group, i, name))
-                else:
-                    rolling.append((group, i, name))
-            elif name in ("ckv", "kr") and leaf.shape[-2] == self.max_seq:
-                linear.append((group, i, name))
-        for group in ("pre", "rem"):
-            for i, layer in enumerate(self.cache[group] or ()):
-                for name, leaf in layer.items():
-                    classify(group, i, name, leaf)
-        for i, layer in enumerate(self.cache["scan"] or ()):
-            for name, leaf in layer.items():
-                classify("scan", i, name, leaf)
-        return linear, rolling
-
-    def _kv_leaf_rows(self, path, slot: int, start: int, length: int):
-        """(heads_batch, length, d) view of cache rows [start, start+len)."""
-        group, i, name = path
-        leaf = self.cache[group][i][name]
-        if group == "scan":
-            leaf = leaf[:, slot]                   # (periods, S, ...) view
-        else:
-            leaf = leaf[slot]
-        if name in ("k", "v"):
-            rows = leaf[..., start:start + length, :, :]
-            rows = jnp.moveaxis(rows, -2, -3)      # (..., KV, T, hd)
-        else:                                      # ckv/kr: (..., S, d)
-            rows = leaf[..., start:start + length, :][..., None, :, :]
-        return rows.reshape((-1,) + rows.shape[-2:])
-
-    def _kv_leaf_rows_ring(self, path, slot: int, start: int, length: int):
-        """(heads_batch, length, d) view of a WINDOWED leaf's cache rows for
-        absolute history positions [start, start+length) — the cache ring
-        holds position ``a`` in seq slot ``a % window``
-        (transformer._attn_with_cache ring formula)."""
-        group, i, name = path
-        leaf = self.cache[group][i][name]
-        leaf = leaf[:, slot] if group == "scan" else leaf[slot]
-        window = leaf.shape[-3]
-        idx = jnp.asarray((start + np.arange(length)) % window, jnp.int32)
-        rows = jnp.take(leaf, idx, axis=leaf.ndim - 3)
-        rows = jnp.moveaxis(rows, -2, -3)          # (..., KV, T, hd)
-        return rows.reshape((-1,) + rows.shape[-2:])
-
-    def _kv_roll_key(self, slot: int, j: int):
-        return jax.random.fold_in(
-            jax.random.fold_in(jax.random.fold_in(self._kv_key, slot),
-                               0x7011), j)
-
-    def _reset_slot_sketches(self, slot: int) -> None:
-        sketches = {}
-        for j, path in enumerate(self._kv_paths):
-            rows = self._kv_leaf_rows(path, slot, 0, 1)
-            key = jax.random.fold_in(jax.random.fold_in(self._kv_key, slot),
-                                     j)
-            sketches[path] = kv_compress.kv_sketch_init(
-                key, rows.shape[0], rows.shape[-1], self.max_seq,
-                self.kv_sketch_rank)
-        for j, path in enumerate(self._kv_roll_paths):
-            rows = self._kv_leaf_rows_ring(path, slot, 0, 1)
-            group, i, name = path
-            leaf = self.cache[group][i][name]
-            window = (leaf[:, slot] if group == "scan"
-                      else leaf[slot]).shape[-3]
-            sketches[path] = kv_compress.kv_rolling_init(
-                self._kv_roll_key(slot, j), rows.shape[0], rows.shape[-1],
-                window, self.kv_sketch_rank)
-        self._kv_sketches[slot] = sketches
-        # new tenant: drop any compressed-prefix state the slot carried
-        if self.kv_fact is not None and self._kv_comp_len[slot]:
-            for path in self._kv_swap_paths:
-                self._store_factors(slot, path, None)
-            self._kv_comp_len[slot] = 0
-
-    def _append_slot_sketches(self, slot: int, start: int,
-                              length: int) -> None:
-        sk = self._kv_sketches[slot]
-        for path in self._kv_paths:
-            rows = self._kv_leaf_rows(path, slot, start, length)
-            sk[path] = kv_compress.kv_sketch_append(sk[path], rows, start)
-        if not self._kv_contig[slot]:
-            # a slot admitted mid-stream sees the uniform clock REGRESS
-            # below its high-water when longer-running slots finish;
-            # rewriting ring history would corrupt the eviction order, so
-            # its rolling sketches freeze at their last synced state (the
-            # slot is excluded from compression anyway — DESIGN.md §12.1)
-            return
-        for path in self._kv_roll_paths:
-            # rows older than one window are dead on arrival (the cache ring
-            # has already overwritten them): clamp the span to the trailing
-            # window so the read is live and the tile fits the sketch ring
-            end = start + length
-            lo = max(start, end - sk[path].window)
-            rows = self._kv_leaf_rows_ring(path, slot, lo, end - lo)
-            sk[path] = kv_compress.kv_rolling_append(sk[path], rows, lo)
-
-    def _note_kv_row(self, slot: int, pos: int) -> None:
-        """Record that cache row ``pos`` landed for ``slot``; flush the
-        pending span through the sketch GEMMs only when it is long enough
-        to amortize the dispatch (cache rows are append-only while a slot
-        is live, so deferring the read is safe)."""
-        if pos != self._kv_next_row[slot]:
-            self._kv_contig[slot] = False      # gap: slot joined mid-stream
-        self._kv_next_row[slot] = pos + 1
-        pend = self._kv_pending[slot]
-        if pend is None:
-            self._kv_pending[slot] = [pos, 1]
-        elif pend[0] + pend[1] == pos:
-            pend[1] += 1
-        else:                                  # discontiguous: flush + restart
-            self._flush_kv_pending(slot)
-            self._kv_pending[slot] = [pos, 1]
-        pend = self._kv_pending[slot]
-        if pend[1] >= self._kv_flush_every:
-            self._flush_kv_pending(slot)
-
-    def _flush_kv_pending(self, slot: int) -> None:
-        pend = self._kv_pending[slot]
-        if pend is None:
-            return
-        # fixed-size chunks keep the jitted update shapes to at most
-        # _kv_flush_every variants (arbitrary prompt lengths would otherwise
-        # compile a fresh executable per distinct span length per leaf)
-        start, count = pend
-        while count > 0:
-            step = min(count, self._kv_flush_every)
-            self._append_slot_sketches(slot, start, step)
-            start += step
-            count -= step
-        self._kv_pending[slot] = None
-
-    def kv_factors(self, slot: int) -> dict:
-        """Rank-r FactoredKV per sketched cache leaf for ``slot``, finalized
-        from the incrementally maintained sketches (no re-sketching).
-
-        Full-context leaves factor against the slot's logical history (live
-        dense rows, plus the reconstructed prefix once a compression swap
-        has zeroed those rows — ``_kv_hist``); windowed leaves factor the
-        current window from their rolling sketches."""
-        if self._kv_sketches[slot] is None:
-            raise ValueError(f"slot {slot} has no sketch state (engine "
-                             f"built without kv_sketch_rank, or slot never "
-                             f"admitted)")
-        self._flush_kv_pending(slot)
-        out = {}
-        for path in self._kv_paths:
-            out[path] = kv_compress.kv_sketch_factor(
-                self._kv_sketches[slot][path], self._kv_hist(slot, path),
-                self.kv_sketch_rank)
-        for path in self._kv_roll_paths:
-            out[path] = kv_compress.kv_rolling_factor(
-                self._kv_sketches[slot][path],
-                self._kv_ring_hist(slot, path), self.kv_sketch_rank)
-        return out
-
-    # -- acting on the sketches: compress / swap / account (DESIGN.md §12) --
-    def _kv_hist(self, slot: int, path) -> jax.Array:
-        """(heads_batch, max_seq, d) f32 logical history for a full-context
-        leaf: the live dense rows plus, once rows [0, comp_len) have been
-        swapped out (zeroed), the rank-r reconstruction of that prefix —
-        ``us`` rows at/beyond comp_len are zero, so plain addition splices
-        the two regions."""
-        hist = self._kv_leaf_rows(path, slot, 0,
-                                  self.max_seq).astype(jnp.float32)
-        if (self.kv_fact is not None and self._kv_comp_len[slot]
-                and path in self._kv_swap_paths):
-            f = self._load_factors(slot, path)
-            hist = hist + jnp.einsum("hsr,hrd->hsd", f.us, f.vt)
-        return hist
-
-    def _kv_ring_hist(self, slot: int, path) -> jax.Array:
-        """(heads_batch, window, d) window-ordered history of a windowed
-        leaf (oldest live row first) — what kv_rolling_factor expects."""
-        window = self._kv_sketches[slot][path].window
-        total = int(self._kv_sketches[slot][path].rows_seen.max())
-        start = max(0, total - window)
-        return self._kv_leaf_rows_ring(path, slot, start, window)
-
-    def _fact_leaves(self, path):
-        group, i, name = path
-        return self.kv_fact[group][i], f"{name}_us", f"{name}_vt"
-
-    def _store_factors(self, slot: int, path,
-                       f: Optional[kv_compress.FactoredKV]) -> None:
-        """Scatter one path's head-batched factors into the slot-batched
-        factored leaves (None -> zero the slot's entries)."""
-        tree, n_us, n_vt = self._fact_leaves(path)
-        us, vt = tree[n_us], tree[n_vt]
-        if path[0] == "scan":                # (periods, slots, KV, ...)
-            if f is None:
-                tree[n_us] = us.at[:, slot].set(0.0)
-                tree[n_vt] = vt.at[:, slot].set(0.0)
-            else:
-                tree[n_us] = us.at[:, slot].set(
-                    f.us.reshape(us.shape[:1] + us.shape[2:]))
-                tree[n_vt] = vt.at[:, slot].set(
-                    f.vt.reshape(vt.shape[:1] + vt.shape[2:]))
-        else:                                # (slots, KV, ...)
-            if f is None:
-                tree[n_us] = us.at[slot].set(0.0)
-                tree[n_vt] = vt.at[slot].set(0.0)
-            else:
-                tree[n_us] = us.at[slot].set(f.us.reshape(us.shape[1:]))
-                tree[n_vt] = vt.at[slot].set(f.vt.reshape(vt.shape[1:]))
-
-    def _load_factors(self, slot: int, path) -> kv_compress.FactoredKV:
-        """Inverse of _store_factors: (heads_batch, S, r) / (heads_batch,
-        r, d) views of the slot's stored factors."""
-        tree, n_us, n_vt = self._fact_leaves(path)
-        us, vt = tree[n_us], tree[n_vt]
-        if path[0] == "scan":
-            us, vt = us[:, slot], vt[:, slot]
-            us = us.reshape((-1,) + us.shape[-2:])
-            vt = vt.reshape((-1,) + vt.shape[-2:])
-        else:
-            us, vt = us[slot], vt[slot]
-        return kv_compress.FactoredKV(us, vt)
-
-    def _zero_dense_prefix(self, slot: int, path, pos: int) -> None:
-        group, i, name = path
-        leaf = self.cache[group][i][name]
-        if group == "scan":                  # (periods, slots, S, KV, hd)
-            self.cache[group][i][name] = leaf.at[:, slot, :pos].set(0)
-        else:                                # (slots, S, KV, hd)
-            self.cache[group][i][name] = leaf.at[slot, :pos].set(0)
-
-    def compress_slot(self, slot: int) -> None:
-        """Swap ``slot``'s dense rows [0, pos) for rank-r factors: finalize
-        each full-context k/v leaf's factors from its incremental sketch,
-        store them in the factored leaves the decode step attends through,
-        zero the dense rows, and advance ``comp_len``.  New tokens keep
-        appending to the dense tail; call again (or let the automatic
-        ``kv_compress_ratio`` trigger fire) when the tail grows back.
-
-        Raises ValueError when there is nothing to compress — an engine
-        without ``kv_compress_ratio``, a never-admitted slot, a slot whose
-        history is still shorter than the sketch width p (the zero-unseen-
-        rows guarantee needs >= p streamed rows), or a slot with no new
-        dense tail since the last swap (re-compression needs new rows; a
-        second swap would only re-approximate the same factors).
-        """
-        if self.kv_fact is None:
-            raise ValueError("engine built without kv_compress_ratio — "
-                             "sketches are maintained but never acted on")
-        if self._kv_sketches[slot] is None:
-            raise ValueError(f"slot {slot} has no sketch state (never "
-                             f"admitted)")
-        self._flush_kv_pending(slot)
-        pos = int(self.pos[slot])
-        comp = int(self._kv_comp_len[slot])
-        if pos - comp <= 0:
-            raise ValueError(
-                f"slot {slot} is already fully factored (comp_len == pos "
-                f"== {pos}): re-compression needs newly appended dense-tail "
-                f"rows")
-        if pos < self._kv_min_rows:
-            raise ValueError(
-                f"slot {slot} has {pos} rows < sketch width "
-                f"p={self._kv_min_rows}; compressing now would leave junk "
-                f"in the factored rows beyond the history")
-        if not self._kv_contig[slot]:
-            raise ValueError(
-                f"slot {slot} was admitted mid-stream: the uniform slot "
-                f"clock wrote its decode rows beyond pos={pos}, so the "
-                f"history has a gap the sketch never streamed — "
-                f"compression requires an append-only contiguous history "
-                f"(DESIGN.md §12.1)")
-        for path in self._kv_swap_paths:
-            f = kv_compress.kv_sketch_factor(
-                self._kv_sketches[slot][path], self._kv_hist(slot, path),
-                self.kv_sketch_rank)
-            self._store_factors(slot, path, f)
-        for path in self._kv_swap_paths:
-            self._zero_dense_prefix(slot, path, pos)
-        self._kv_comp_len[slot] = pos
-
-    def _maybe_compress(self, slot: int) -> None:
-        if self.kv_fact is None or not self._kv_contig[slot]:
-            return
-        pos, comp = int(self.pos[slot]), int(self._kv_comp_len[slot])
-        if pos - comp >= self._kv_threshold and pos >= self._kv_min_rows:
-            self.compress_slot(slot)
-
-    def kv_slot_bytes(self, slot: int) -> dict:
-        """Per-slot HBM accounting over the swappable (full-context attn
-        k/v) leaves: what a dense engine holds live for this slot vs what
-        the compressed representation needs (dense tail + f32 factors).
-        Representation bytes — the static pool itself cannot shrink at
-        runtime; the win is pool capacity (DESIGN.md §12).  Zero for
-        engines with nothing swappable (MLA latents are not k/v rows)."""
-        pos = int(self.pos[slot])
-        comp = int(self._kv_comp_len[slot])
-        r = self.kv_sketch_rank or 0
-        dense = held = 0
-        for path in self._kv_swap_paths:
-            group, i, name = path
-            leaf = self.cache[group][i][name]
-            lead = leaf.shape[0] if group == "scan" else 1
-            kv, hd = leaf.shape[-2], leaf.shape[-1]
-            item = jnp.dtype(leaf.dtype).itemsize
-            dense += lead * kv * pos * hd * item
-            held += lead * kv * (pos - comp) * hd * item
-            if comp:
-                held += lead * kv * (comp * r + r * hd) * 4   # f32 factors
-        return {"slot": slot, "pos": pos, "comp_len": comp,
-                "dense_bytes": dense, "compressed_bytes": held,
-                "ratio": (held / dense) if dense else 1.0}
-
-    def kv_bytes_report(self) -> dict:
-        per_slot = [self.kv_slot_bytes(s) for s in range(self.slots)]
-        return {
-            "slots": per_slot,
-            "dense_bytes": sum(r["dense_bytes"] for r in per_slot),
-            "compressed_bytes": sum(r["compressed_bytes"]
-                                    for r in per_slot),
-        }
-
-    # -- slot prefill: run the prompt through decode steps (simple, correct,
-    #    static-shaped; a chunked prefill kernel is a serving optimization) --
-    def _make_slot_prefill(self):
-        serve = R.make_serve_step(self.cfg)
-
-        def mask_group(new, old, axis):
-            def f(n, o):
-                if n is None:
-                    return None
-                shape = [1] * n.ndim
-                shape[axis] = self.slots
-                return jnp.where(slot_mask_ref[0].reshape(shape), n, o)
-            return jax.tree.map(f, new, old)
-
-        slot_mask_ref = [None]  # closed over; set per call below
-
-        def run(params, cache, tokens, start, slot_mask):
-            slot_mask_ref[0] = slot_mask
-
-            def body(carry, tok_pos):
-                cache, _ = carry
-                tok, pos = tok_pos
-                logits, new_cache = serve(params, {
-                    "tokens": jnp.broadcast_to(tok, (self.slots, 1)),
-                    "cache": cache, "write_pos": pos})
-                # only the target slot's cache rows advance.  Slot axis: 0 for
-                # pre/rem leaves, 1 for scan-stacked leaves (periods lead).
-                cache = {
-                    "pre": mask_group(new_cache["pre"], cache["pre"], 0),
-                    "scan": (mask_group(new_cache["scan"], cache["scan"], 1)
-                             if cache["scan"] is not None else None),
-                    "rem": mask_group(new_cache["rem"], cache["rem"], 0),
-                }
-                return (cache, logits), None
-
-            zeros = jnp.zeros((self.slots, self.cfg.vocab), jnp.float32)
-            (cache, logits), _ = jax.lax.scan(
-                body, (cache, zeros),
-                (tokens, start + jnp.arange(tokens.shape[0])))
-            return cache, logits
-
-        return run
 
     def submit(self, req: Request) -> None:
+        """Enqueue a request; raises QueueFullError (carrying the current
+        queue depth) once ``max_queue`` requests are already waiting, so
+        producers see backpressure instead of silent unbounded growth."""
+        if len(self.queue) >= self.max_queue:
+            raise QueueFullError(req.rid, len(self.queue), self.max_queue)
         self.queue.append(req)
 
     def _admit(self) -> None:
@@ -519,20 +104,8 @@ class Engine:
             tokens[s, 0] = self.active[s].out[-1] if self.active[s].out \
                 else self.active[s].prompt[-1]
         write_pos = int(max(self.pos[s] for s in live))  # uniform slot clock
-        batch = {"tokens": jnp.asarray(tokens), "cache": self.cache,
-                 "write_pos": jnp.asarray(write_pos, jnp.int32)}
-        if self.kv_fact is not None:
-            batch["kv_factors"] = self.kv_fact
-            batch["comp_len"] = jnp.asarray(self._kv_comp_len)
-        logits, self.cache = self._decode(self.params, batch)
-        self.last_logits = logits    # (slots, vocab) f32, device-resident —
-        # consumers (tests, probes) np.asarray it; the hot loop never does
-        if self.temperature > 0:
-            self.key, sub = jax.random.split(self.key)
-            nxt = jax.random.categorical(sub, logits / self.temperature)
-        else:
-            nxt = jnp.argmax(logits, axis=-1)
-        nxt = np.asarray(nxt)
+        logits = self.decode_logits(tokens, write_pos)
+        nxt = self.sample(logits)
         if self.kv_sketch_rank:
             for s in live:
                 self._note_kv_row(s, write_pos)

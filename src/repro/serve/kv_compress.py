@@ -37,6 +37,16 @@ class FactoredKV(NamedTuple):
     vt: jax.Array   # (r, d)
 
 
+def factor_bytes(comp_len: int, rank: int, head_dim: int) -> int:
+    """Bytes one head's f32 FactoredKV holds for a ``comp_len``-row
+    compressed prefix: us (comp_len, r) + vt (r, head_dim).  The single
+    source of truth for factor-side HBM accounting (model_step
+    ``kv_slot_bytes``, scheduler admission, serve_bench capacity plans);
+    ``models/cache.kv_stream_bytes`` inlines the same arithmetic (it cannot
+    import this module without a cycle through serve/__init__)."""
+    return (comp_len * rank + rank * head_dim) * 4
+
+
 def compress_matrix(key, m: jax.Array, rank: int) -> FactoredKV:
     res = rsvd_mod.rsvd(key, m.astype(jnp.float32), rank,
                         oversample=min(8, max(2, rank // 4)),

@@ -1,0 +1,316 @@
+"""Continuous-batching scheduler over the model-step layer (DESIGN.md §15).
+
+Covers the scheduler contract: bounded-queue backpressure (both the
+scheduler's soft reject and Engine.submit's QueueFullError), chunked
+prefill that does not stall in-flight decodes, greedy equivalence with the
+legacy Engine on a solo request, catch-up contiguity (staggered admissions
+COMPRESS under the scheduler while the Engine path still trips the
+DESIGN.md §12.1 mid-stream guard), evict-then-readmit slot reuse with a
+complete sketch/factor reset (linear AND rolling-ring states, bitwise vs a
+fresh model), eviction-at-max_seq accounting, compression-aware admission
+caps, and determinism of the SLO summary across runs.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.base import smoke_config
+from repro.models import registry as R
+from repro.models import transformer as T
+from repro.serve import loadgen
+from repro.serve.engine import Engine, Request
+from repro.serve.model_step import ModelStep
+from repro.serve.scheduler import QueueFullError, Scheduler
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _qwen():
+    cfg = smoke_config(R.get_arch("qwen3-0.6b"))
+    return cfg, T.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _drain(sch):
+    while sch.queue or sch._live():
+        sch.step()
+
+
+def _live_reqs(sch):
+    return [r for r in sch.active if r is not None]
+
+
+# -- bounded queue / backpressure -----------------------------------------
+
+def test_engine_submit_raises_queue_full():
+    cfg, params = _qwen()
+    eng = Engine(cfg, params, slots=1, max_seq=32, max_queue=2)
+    eng.submit(Request(rid=0, prompt=[1, 2], max_new=2))
+    eng.submit(Request(rid=1, prompt=[3, 4], max_new=2))
+    with pytest.raises(QueueFullError) as ei:
+        eng.submit(Request(rid=2, prompt=[5, 6], max_new=2))
+    err = ei.value
+    assert err.rid == 2 and err.queue_depth == 2 and err.max_queue == 2
+    assert "queue depth 2" in str(err)
+    with pytest.raises(ValueError, match=">= 1"):
+        Engine(cfg, params, slots=1, max_seq=32, max_queue=0)
+
+
+def test_scheduler_reject_lands_in_metrics():
+    cfg, params = _qwen()
+    model = ModelStep(cfg, params, slots=1, max_seq=32)
+    sch = Scheduler(model, max_queue=1)
+    assert sch.submit(0, [1, 2, 3], 2) is True
+    assert sch.submit(1, [4, 5, 6], 2) is False     # queue full: soft reject
+    assert len(sch.metrics.rejected) == 1
+    rej = sch.metrics.rejected[0]
+    assert rej["rid"] == 1 and rej["queue_depth"] == 1
+    acct = sch.metrics.accounting(expected=2)
+    assert acct["attempted"] == 2 and acct["unaccounted"] == 0
+    with pytest.raises(ValueError, match="cannot fit max_seq"):
+        sch.submit(2, list(range(40)), 2)
+
+
+def test_scheduler_constructor_validation():
+    cfg, params = _qwen()
+    model = ModelStep(cfg, params, slots=2, max_seq=32)
+    with pytest.raises(ValueError, match="max_queue"):
+        Scheduler(model, max_queue=0)
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        Scheduler(model, prefill_chunk=1)
+    with pytest.raises(ValueError, match="nothing could ever be admitted"):
+        Scheduler(model, hbm_budget=1)
+
+
+# -- greedy equivalence with the legacy Engine ----------------------------
+
+def test_solo_request_matches_engine_greedy():
+    cfg, params = _qwen()
+    prompt, max_new = [5, 9, 2, 7], 8
+
+    eng = Engine(cfg, params, slots=2, max_seq=48)
+    req = Request(rid=0, prompt=list(prompt), max_new=max_new)
+    eng.submit(req)
+    while eng.queue or any(eng.active):
+        eng.step()
+
+    model = ModelStep(cfg, params, slots=2, max_seq=48)
+    sch = Scheduler(model, prefill_chunk=4)
+    sch.submit(0, prompt, max_new)
+    _drain(sch)
+
+    assert len(sch.finished) == 1
+    assert sch.finished[0].out == req.out
+    assert len(req.out) == max_new
+
+
+# -- chunked prefill interleaved with decode ------------------------------
+
+def test_long_prefill_does_not_stall_decode():
+    cfg, params = _qwen()
+    model = ModelStep(cfg, params, slots=2, max_seq=64)
+    sch = Scheduler(model, prefill_chunk=4)
+    sch.submit(0, [1, 2, 3], 16)                  # short: decodes first
+    sch.step()
+    sch.step()
+    short = next(r for r in _live_reqs(sch) if r.rid == 0)
+    assert short.phase == "decode" and len(short.out) >= 1
+    sch.submit(1, list(range(1, 25)), 4)          # 24-token prompt
+    overlapped = 0
+    while sch.queue or sch._live():
+        long_req = next((r for r in _live_reqs(sch) if r.rid == 1), None)
+        before = len(short.out)
+        pre_before = long_req.prefilled if long_req else 0
+        sch.step()
+        if (long_req is not None and not long_req.done
+                and long_req.prefilled > pre_before
+                and len(short.out) > before):
+            overlapped += 1
+    # the long prompt took multiple chunks, and the short request kept
+    # emitting tokens during those same steps
+    assert overlapped >= 2
+    assert {r.rid for r in sch.finished} == {0, 1}
+    assert not sch.finished[0].evicted and not sch.finished[1].evicted
+
+
+# -- catch-up contiguity: staggered admission still compresses ------------
+
+def test_staggered_admission_compresses_under_scheduler():
+    """The Engine's uniform-clock admission gaps a late slot's history and
+    the §12.1 guard forbids compression; the scheduler's catch-up decode
+    keeps every slot append-only contiguous, so the SAME stagger
+    compresses."""
+    cfg, params = _qwen()
+    kw = dict(slots=2, max_seq=64, kv_sketch_rank=2, kv_compress_ratio=2.0)
+
+    eng = Engine(cfg, params, **kw)
+    eng.submit(Request(rid=0, prompt=[1, 2, 3, 4], max_new=20))
+    for _ in range(6):
+        eng.step()
+    eng.submit(Request(rid=1, prompt=[5, 6, 7, 8], max_new=20))
+    eng.step()                                    # admission happens in step
+    late_slot = next(s for s in range(2)
+                     if eng.active[s] and eng.active[s].rid == 1)
+    comp_at_admit = int(eng._kv_comp_len[late_slot])  # prompt-only swap is
+    while eng.queue or any(eng.active):               # legal (still contig)
+        eng.step()
+    assert not eng._kv_contig[late_slot]
+    # the guard froze comp_len at admission even though pos kept growing
+    assert int(eng._kv_comp_len[late_slot]) == comp_at_admit
+    assert int(eng.pos[late_slot]) > comp_at_admit + eng._kv_threshold
+    with pytest.raises(ValueError, match="admitted mid-stream"):
+        eng.compress_slot(late_slot)
+
+    model = ModelStep(cfg, params, **kw)
+    sch = Scheduler(model, prefill_chunk=4)
+    sch.submit(0, [1, 2, 3, 4], 20)
+    for _ in range(6):
+        sch.step()
+    sch.submit(1, [5, 6, 7, 8], 20)
+    max_comp = {0: 0, 1: 0}
+    while sch.queue or sch._live():
+        sch.step()
+        for r in _live_reqs(sch):
+            max_comp[r.rid] = max(max_comp[r.rid],
+                                  int(model._kv_comp_len[r.slot]))
+    assert all(model._kv_contig)
+    # the late stream keeps RE-compressing past its prompt as it decodes —
+    # the thing the Engine's frozen comp_len above can never do
+    assert max_comp[1] > 4
+    assert max_comp[0] > 4
+
+
+# -- evict-then-readmit: complete per-slot reset --------------------------
+
+def _drive_solo(model, slot, prompt, n_new):
+    """Prefill + single-token decode at the slot's own positions (the
+    catch-up primitive), firing auto_compress like promotion/decode do.
+    Returns the greedy output tokens."""
+    logits = model.prefill_rows(slot, prompt, 0)
+    out = [int(np.asarray(logits).argmax())]
+    model.auto_compress(slot)
+    for _ in range(n_new - 1):
+        logits = model.prefill_rows(slot, [out[-1]],
+                                    int(model.pos[slot]))
+        out.append(int(np.asarray(logits).argmax()))
+        model.auto_compress(slot)
+    return out
+
+
+def _assert_factors_equal(fa, fb):
+    assert set(fa) == set(fb)
+    for path in fa:
+        np.testing.assert_array_equal(np.asarray(fa[path].us),
+                                      np.asarray(fb[path].us))
+        np.testing.assert_array_equal(np.asarray(fa[path].vt),
+                                      np.asarray(fb[path].vt))
+
+
+def test_evict_readmit_resets_sketches_and_factors():
+    cfg, params = _qwen()
+    kw = dict(slots=2, max_seq=48, kv_sketch_rank=2, kv_compress_ratio=2.0)
+    prompt_b, new_b = [9, 4, 6, 2, 8], 10
+
+    used = ModelStep(cfg, params, **kw)
+    used.begin_slot(0)
+    _drive_solo(used, 0, [3, 1, 4, 1, 5, 9, 2, 6], 14)   # tenant A
+    assert int(used._kv_comp_len[0]) > 0                 # A really swapped
+    used.begin_slot(0)                                   # evict -> readmit
+    assert int(used.pos[0]) == 0
+    assert int(used._kv_comp_len[0]) == 0
+    assert used._kv_pending[0] is None and used._kv_contig[0]
+    assert int(used._kv_next_row[0]) == 0
+    # factored leaves hold nothing of tenant A
+    for path in used._kv_swap_paths:
+        f = used._load_factors(0, path)
+        assert not np.asarray(f.us).any() and not np.asarray(f.vt).any()
+
+    fresh = ModelStep(cfg, params, **kw)
+    fresh.begin_slot(0)
+
+    out_used = _drive_solo(used, 0, prompt_b, new_b)
+    out_fresh = _drive_solo(fresh, 0, prompt_b, new_b)
+    assert out_used == out_fresh
+    _assert_factors_equal(used.kv_factors(0), fresh.kv_factors(0))
+    assert used.kv_slot_bytes(0) == fresh.kv_slot_bytes(0)
+
+
+def test_evict_readmit_resets_rolling_ring_gemma2():
+    """gemma2's sliding-window leaves keep ROLLING sketch rings; a stale
+    ring from the previous tenant is the §15 leak begin_slot must close."""
+    cfg = smoke_config(R.get_arch("gemma2-2b"))
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    kw = dict(slots=2, max_seq=48, kv_sketch_rank=2)
+    prompt_b, new_b = [7, 7, 3, 2], 8
+
+    used = ModelStep(cfg, params, **kw)
+    used.begin_slot(0)
+    _drive_solo(used, 0, [2, 4, 6, 8, 10, 12], 20)       # fills the ring
+    used.begin_slot(0)
+
+    fresh = ModelStep(cfg, params, **kw)
+    fresh.begin_slot(0)
+
+    out_used = _drive_solo(used, 0, prompt_b, new_b)
+    out_fresh = _drive_solo(fresh, 0, prompt_b, new_b)
+    assert out_used == out_fresh
+    _assert_factors_equal(used.kv_factors(0), fresh.kv_factors(0))
+
+
+# -- eviction at max_seq --------------------------------------------------
+
+def test_context_exhaustion_evicts_and_is_accounted():
+    cfg, params = _qwen()
+    model = ModelStep(cfg, params, slots=1, max_seq=16)
+    sch = Scheduler(model, prefill_chunk=4)
+    sch.submit(0, [1, 2, 3, 4], 64)               # cannot fit 64 new tokens
+    _drain(sch)
+    assert len(sch.finished) == 1
+    req = sch.finished[0]
+    assert req.evicted and len(req.out) < 64
+    acct = sch.metrics.accounting(expected=1)
+    assert acct == {"attempted": 1, "submitted": 1, "rejected": 0,
+                    "completed": 1, "in_flight": 0, "evicted": 1,
+                    "unaccounted": 0}
+
+
+# -- compression-aware admission ------------------------------------------
+
+def test_hbm_budget_caps_streams_and_compression_raises_cap():
+    cfg, params = _qwen()
+    dense = ModelStep(cfg, params, slots=8, max_seq=64)
+    d_sch = Scheduler(dense)
+    budget = 3 * d_sch.stream_bound
+    d_cap = Scheduler(dense, hbm_budget=budget)
+    assert d_cap.max_streams == 3
+    assert Scheduler(dense).max_streams == 8      # no budget: all slots
+
+    comp = ModelStep(cfg, params, slots=8, max_seq=64,
+                     kv_sketch_rank=2, kv_compress_ratio=2.0)
+    c_cap = Scheduler(comp, hbm_budget=budget)
+    assert c_cap.stream_bound < d_cap.stream_bound
+    assert c_cap.max_streams > d_cap.max_streams  # same budget, more streams
+
+
+# -- determinism ----------------------------------------------------------
+
+def test_slo_summary_deterministic_across_runs():
+    cfg, params = _qwen()
+    trace = loadgen.generate_trace(3, 6, 500.0, vocab=cfg.vocab,
+                                   prompt_short=(3, 6), prompt_long=(8, 12),
+                                   max_new_range=(3, 8))
+
+    def run():
+        model = ModelStep(cfg, params, slots=3, max_seq=48)
+        sch = Scheduler(model, prefill_chunk=4)
+        sch.run(trace)
+        return (sch.metrics.summary(expected=len(trace)),
+                sorted((r.rid, tuple(r.out)) for r in sch.finished))
+
+    s1, out1 = run()
+    s2, out2 = run()
+    assert s1 == s2                                # exact, incl. percentiles
+    assert out1 == out2
+    assert s1["accounting"]["unaccounted"] == 0
+    assert s1["accounting"]["in_flight"] == 0

@@ -1,0 +1,122 @@
+"""Loadgen determinism + SLO metrics unit contract (DESIGN.md §15).
+
+The serve bench's headline numbers are only meaningful because the trace is
+replayable (same seed -> bitwise-identical trace, JSON round-trip exact)
+and the metrics are deterministic (nearest-rank percentiles, virtual-clock
+timestamps, conservation accounting).  Pure numpy/python — no jax, no
+model.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.serve import loadgen
+from repro.serve.metrics import (RequestRecord, ServeMetrics,
+                                 format_slo_table, percentile)
+
+
+# -- trace generation ------------------------------------------------------
+
+def test_trace_deterministic_in_seed():
+    a = loadgen.generate_trace(5, 40, 120.0)
+    b = loadgen.generate_trace(5, 40, 120.0)
+    assert a == b                                  # dataclass equality
+    c = loadgen.generate_trace(6, 40, 120.0)
+    assert a != c
+
+
+def test_trace_shape_and_distributions():
+    tr = loadgen.generate_trace(0, 200, 100.0, vocab=64,
+                                prompt_short=(4, 12), prompt_long=(24, 48),
+                                long_frac=0.25, max_new_range=(4, 24))
+    assert [r.rid for r in tr] == list(range(200))
+    assert tr[0].arrival_s == 0.0
+    arr = [r.arrival_s for r in tr]
+    assert arr == sorted(arr)                      # arrivals non-decreasing
+    lens = [len(r.prompt) for r in tr]
+    assert all(4 <= n <= 12 or 24 <= n <= 48 for n in lens)
+    assert any(n >= 24 for n in lens) and any(n <= 12 for n in lens)
+    assert all(4 <= r.max_new <= 24 for r in tr)
+    assert all(1 <= t < 64 for r in tr for t in r.prompt)
+
+
+def test_trace_validation():
+    with pytest.raises(ValueError, match="n_requests"):
+        loadgen.generate_trace(0, 0, 100.0)
+    with pytest.raises(ValueError, match="arrival_rate"):
+        loadgen.generate_trace(0, 4, 0.0)
+
+
+def test_trace_roundtrip_exact(tmp_path):
+    tr = loadgen.generate_trace(9, 25, 300.0)
+    path = tmp_path / "trace.json"
+    loadgen.save_trace(tr, str(path), meta={"seed": 9})
+    back = loadgen.load_trace(str(path))
+    assert back == tr
+
+
+# -- percentile: nearest-rank, deterministic -------------------------------
+
+def test_percentile_nearest_rank():
+    xs = [0.1, 0.2, 0.3, 0.4]
+    assert percentile(xs, 50) == 0.2               # no interpolation
+    assert percentile(xs, 99) == 0.4
+    assert percentile(xs, 0) == 0.1
+    assert percentile([7.0], 99) == 7.0
+    assert percentile([], 50) == 0.0
+
+
+# -- metrics lifecycle -----------------------------------------------------
+
+def test_request_record_slos():
+    rec = RequestRecord(rid=0, submit_s=1.0, admit_s=1.5, first_token_s=2.0,
+                        finish_s=4.0, n_out=5)
+    assert rec.ttft == 1.0
+    assert rec.queue_wait == 0.5
+    assert rec.latency == 3.0
+    assert rec.tpot == pytest.approx(0.5)          # (4-2)/(5-1)
+    assert RequestRecord(rid=1, submit_s=0.0).ttft is None
+
+
+def test_metrics_accounting_conservation():
+    m = ServeMetrics()
+    m.on_submit(0, 0.0, 4, 8)
+    m.on_submit(1, 0.1, 4, 8)
+    m.on_reject(2, 0.2, 7)
+    m.on_admit(0, 0.3)
+    m.on_token(0, 0.5)
+    m.on_finish(0, 0.9)
+    acct = m.accounting(expected=3)
+    assert acct["attempted"] == 3 and acct["unaccounted"] == 0
+    assert acct["rejected"] == 1 and acct["completed"] == 1
+    assert acct["in_flight"] == 1                  # rid 1 never finished
+    # a vanished request shows up as unaccounted > 0
+    assert m.accounting(expected=4)["unaccounted"] == 1
+
+
+def test_metrics_summary_and_table():
+    m = ServeMetrics()
+    for rid in range(3):
+        m.on_submit(rid, rid * 0.1, 4, 2)
+        m.on_admit(rid, rid * 0.1 + 0.05)
+        m.on_token(rid, rid * 0.1 + 0.2)
+        m.on_token(rid, rid * 0.1 + 0.3)
+        m.on_finish(rid, rid * 0.1 + 0.3)
+    m.sample(2, 3, hbm={"dense_bytes": 1000, "compressed_bytes": 600})
+    s = m.summary(expected=3)
+    assert s["completed"] == 3 and s["output_tokens"] == 6
+    assert s["ttft_p50_s"] == pytest.approx(0.2)
+    assert s["tokens_per_s"] > 0
+    assert s["hbm"]["headroom_bytes"] == 400
+    assert s["accounting"]["unaccounted"] == 0
+    table = format_slo_table(s)
+    for label in ("tokens/sec", "TTFT p50 / p99", "queue depth",
+                  "HBM headroom vs dense", "rejected (backpressure)"):
+        assert label in table
+
+
+def test_trace_request_fields_survive_asdict():
+    r = loadgen.TraceRequest(rid=3, arrival_s=0.25, prompt=[1, 2], max_new=4)
+    d = dataclasses.asdict(r)
+    assert d == {"rid": 3, "arrival_s": 0.25, "prompt": [1, 2], "max_new": 4}
