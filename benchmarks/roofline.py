@@ -147,11 +147,85 @@ def analyze_cell(path: Path) -> dict:
     }
 
 
+DRYRUN_CMD = "PYTHONPATH=src python -m repro.launch.dryrun --all"
+
+
+def require_results_dir(d: Path) -> None:
+    """Exit with a actionable message instead of a raw traceback when the
+    dry-run artifacts have not been produced yet."""
+    if not d.is_dir():
+        raise SystemExit(
+            f"roofline: no dry-run artifacts at {d}\n"
+            f"Produce them first with:\n    {DRYRUN_CMD}\n"
+            f"then re-run this script (optionally passing the results dir).")
+
+
 def full_table(mesh: str = "16x16", results_dir=None) -> list[dict]:
+    d = results_dir or RESULTS_DIR
+    require_results_dir(d)
     out = []
-    for p in sorted((results_dir or RESULTS_DIR).glob(f"*__{mesh}.json")):
+    for p in sorted(d.glob(f"*__{mesh}.json")):
         out.append(analyze_cell(p))
     return out
+
+
+# ---------------------------------------------------------------------------
+# Fused factored-decode kernel vs jnp oracle — analytic roofline row
+# ---------------------------------------------------------------------------
+
+def decode_kernel_row(b: int = 8, s: int = 4096, kvh: int = 8, g: int = 4,
+                      hd: int = 128, r: int = 16, comp_frac: float = 0.75,
+                      cache_elt_bytes: int = 2) -> dict:
+    """Analytic compare of one factored-decode attention step (per layer):
+    the jnp oracle (models/layers.py) vs the fused Pallas kernel
+    (kernels/factored_decode.py, DESIGN.md §16), both against the same
+    HBM_BW / PEAK_BF16_FLOPS roofline.
+
+    jnp oracle: computes BOTH dense and factored scores for every kv
+    position (then where-selects), and materializes the (B, KV, G, S)
+    score/prob tensors in HBM (~3 f32 round trips).  Fused kernel: scores
+    each position exactly once (pl.when block classification on comp_len /
+    write_pos), keeps the running softmax state in VMEM, and accumulates the
+    prefix value contraction rank-r — HBM traffic is operand reads + the
+    (B, 1, H, hd) output alone.
+    """
+    heads = kvh * g
+    sc = comp_frac                              # fraction of rows factored
+    dense_score = 2.0 * b * kvh * g * s * hd
+    fact_score = 2.0 * b * kvh * (g * r * hd + g * s * r)
+    dense_val = 2.0 * b * kvh * g * s * hd
+    fact_val = 2.0 * b * kvh * (g * s * r + g * r * hd)
+
+    kv_read = 2 * b * s * kvh * hd * cache_elt_bytes        # K and V
+    us_read = 2 * b * kvh * s * r * 4                       # k_us + v_us f32
+    vt_read = 2 * b * kvh * r * hd * 4
+    score_rt = 3 * 2 * b * kvh * g * s * 4                  # ~3 f32 r/w trips
+    out_w = b * heads * hd * cache_elt_bytes
+
+    jnp_flops = dense_score + fact_score + dense_val + fact_val
+    jnp_bytes = kv_read + us_read + vt_read + score_rt + out_w
+
+    # kernel: dense GEMMs only over the (1 - sc) tail, factored GEMMs only
+    # over the sc prefix; no score materialization.  K/V block fetches still
+    # cover every row <= write_pos (BlockSpec-scheduled), factors likewise.
+    k_flops = ((1 - sc) * (dense_score + dense_val)
+               + sc * (fact_score + fact_val))
+    k_bytes = kv_read + us_read + vt_read + out_w
+
+    t_jnp = max(jnp_flops / PEAK_BF16_FLOPS, jnp_bytes / HBM_BW)
+    t_k = max(k_flops / PEAK_BF16_FLOPS, k_bytes / HBM_BW)
+    return {
+        "kind": "decode_kernel",
+        "shape": f"b{b}_s{s}_kv{kvh}x{g}_hd{hd}_r{r}_c{comp_frac:g}",
+        "jnp_flops": jnp_flops, "jnp_bytes": jnp_bytes,
+        "kernel_flops": k_flops, "kernel_bytes": k_bytes,
+        "t_jnp_s": t_jnp, "t_kernel_s": t_k,
+        "dominant_jnp": "memory" if jnp_bytes / HBM_BW > jnp_flops
+                        / PEAK_BF16_FLOPS else "compute",
+        "dominant_kernel": "memory" if k_bytes / HBM_BW > k_flops
+                           / PEAK_BF16_FLOPS else "compute",
+        "speedup": t_jnp / max(t_k, 1e-30),
+    }
 
 
 def format_table(rows: list[dict]) -> str:
@@ -181,6 +255,12 @@ def run() -> list:
                     r['t_collective_s']) * 1e6,
                 f"dom={r['dominant']};mfu={r['roofline_mfu']*100:.1f}%;"
                 f"model/hlo={r['model_over_hlo']:.2f}"))
+    dk = decode_kernel_row()
+    rows_out.append((
+        f"roofline.decode_kernel.{dk['shape']}",
+        dk["t_kernel_s"] * 1e6,
+        f"jnp_us={dk['t_jnp_s']*1e6:.1f};speedup={dk['speedup']:.2f}x;"
+        f"dom={dk['dominant_kernel']}"))
     return rows_out
 
 
@@ -190,3 +270,10 @@ if __name__ == "__main__":
     rows = full_table(results_dir=d)
     print(f"# roofline table from {d}")
     print(format_table(rows))
+    dk = decode_kernel_row()
+    print(f"\n# factored-decode kernel vs jnp oracle (analytic, {dk['shape']})")
+    print(f"  jnp:    {dk['t_jnp_s']*1e6:8.1f} us  ({dk['dominant_jnp']}-bound,"
+          f" {dk['jnp_bytes']/1e6:.1f} MB, {dk['jnp_flops']/1e9:.1f} GFLOP)")
+    print(f"  kernel: {dk['t_kernel_s']*1e6:8.1f} us  "
+          f"({dk['dominant_kernel']}-bound, {dk['kernel_bytes']/1e6:.1f} MB, "
+          f"{dk['kernel_flops']/1e9:.1f} GFLOP)  -> {dk['speedup']:.2f}x")

@@ -33,6 +33,7 @@ import tempfile
 import time
 
 import jax
+import numpy as np
 
 from benchmarks.common import row
 from repro.configs.base import smoke_config
@@ -40,6 +41,7 @@ from repro.models import cache as cache_mod
 from repro.models import registry as R
 from repro.models import transformer as T
 from repro.serve import loadgen
+from repro.serve.engine import Engine, Request
 from repro.serve.model_step import ModelStep
 from repro.serve.scheduler import Scheduler
 
@@ -191,6 +193,74 @@ def backpressure_rows(knobs: dict, records=None) -> list:
                 f"rejected={acct['rejected']};bound=2")]
 
 
+def decode_kernel_rows(knobs: dict, records=None, *, max_new: int = 24,
+                       steps: int = 64) -> list:
+    """Fused-kernel-vs-jnp decode comparison (the tentpole cross-check):
+    two engines with identical params, compression knobs, and a teacher-
+    forced token stream — one decoding through the jnp oracle
+    (layers.factored_decode_attention), one through the Pallas kernel
+    (cfg.use_flash_kernel -> kernels/factored_decode.py, interpret mode on
+    this CPU container).  Token counts must match exactly (same forced
+    stream, same step count); the per-step logit gap is recorded and
+    bounded.  Emits the `serve_decode_kernel` record CI asserts on."""
+    cfg = smoke_config(R.get_arch(knobs["arch"]))
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    ekw = dict(slots=2, max_seq=knobs["max_seq"],
+               kv_sketch_rank=knobs["rank"],
+               kv_compress_ratio=knobs["ratio"])
+    eng_j = Engine(cfg, params, **ekw)
+    eng_k = Engine(cfg.with_(use_flash_kernel=True), params, **ekw)
+    prompts = [[5, 7, 11, 2], [3, 9, 1, 4]]
+    for eng in (eng_j, eng_k):
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=list(p), max_new=max_new))
+
+    rng = np.random.default_rng(0)
+    forced = rng.integers(0, cfg.vocab, size=steps + 1)
+    tokens = {"jnp": 0, "kernel": 0}
+    diffs = []
+    t0 = time.perf_counter()
+    step = 0
+    while any(e.queue or any(e.active) for e in (eng_j, eng_k)) \
+            and step < steps:
+        cj, ck = eng_j.step(), eng_k.step()
+        tokens["jnp"] += cj
+        tokens["kernel"] += ck
+        if eng_j.last_logits is not None and eng_k.last_logits is not None:
+            live = [s for s in range(eng_j.slots)
+                    if eng_j.active[s] is not None]
+            d = np.abs(np.asarray(eng_k.last_logits)[live]
+                       - np.asarray(eng_j.last_logits)[live])
+            diffs.append(float(d.max()) if d.size else 0.0)
+        for e in (eng_j, eng_k):
+            for s in range(e.slots):
+                if e.active[s] is not None and e.active[s].out:
+                    e.active[s].out[-1] = int(forced[step])
+        step += 1
+    wall_s = time.perf_counter() - t0
+
+    assert diffs, "engines never decoded in lockstep"
+    assert (eng_j._kv_comp_len > 0).any(), \
+        "no slot compressed; the factored kernel path never ran"
+    rec = {
+        "kind": "serve_decode_kernel", "arch": cfg.name,
+        "max_seq": knobs["max_seq"], "rank": knobs["rank"],
+        "compress_ratio": knobs["ratio"], "steps": step,
+        "tokens_jnp": tokens["jnp"], "tokens_kernel": tokens["kernel"],
+        "tokens_match": tokens["jnp"] == tokens["kernel"],
+        "max_logit_diff": max(diffs),
+        "comp_len_jnp": [int(x) for x in eng_j._kv_comp_len],
+        "comp_len_kernel": [int(x) for x in eng_k._kv_comp_len],
+        "wall_s": round(wall_s, 3),
+    }
+    if records is not None:
+        records.append(rec)
+    return [row("serve.decode_kernel", wall_s * 1e6,
+                f"tokens={tokens['jnp']}/{tokens['kernel']};"
+                f"max_logit_diff={max(diffs):.2e};"
+                f"comp_len={rec['comp_len_kernel']}")]
+
+
 def _write_bench(records) -> None:
     with open(BENCH_JSON, "w") as f:
         json.dump(records, f, indent=1)
@@ -199,7 +269,8 @@ def _write_bench(records) -> None:
 def run() -> list:
     records = []
     rows = (serve_rows(FULL, records=records)
-            + backpressure_rows(FULL, records=records))
+            + backpressure_rows(FULL, records=records)
+            + decode_kernel_rows(FULL, records=records))
     for r in records:
         r["profile"] = "full"
     _write_bench(records)
@@ -254,9 +325,42 @@ def smoke() -> None:
           f"unaccounted 0 -> {BENCH_JSON}")
 
 
+def smoke_decode() -> None:
+    """CI `--smoke-decode`: kernel-vs-jnp decode comparison on the smoke
+    knobs.  Asserts matching token counts, a compressed slot (the factored
+    kernel path actually ran), and a bounded logit gap, then merges the
+    `serve_decode_kernel` record into BENCH_serve.json (preserving any
+    serve rows already written by --smoke-serve)."""
+    records = []
+    decode_kernel_rows(SMOKE, records=records)
+    rec = records[0]
+    assert rec["tokens_match"], (rec["tokens_jnp"], rec["tokens_kernel"])
+    assert rec["tokens_jnp"] > 0, rec
+    assert any(c > 0 for c in rec["comp_len_kernel"]), rec
+    # same compression state on both engines; the implementations may only
+    # differ in f32 summation order (bf16 residual stream -> DESIGN.md §12
+    # documented bound)
+    assert rec["comp_len_jnp"] == rec["comp_len_kernel"], rec
+    assert rec["max_logit_diff"] < 1e-1, rec["max_logit_diff"]
+
+    rec["profile"] = "smoke"
+    existing = []
+    if os.path.exists(BENCH_JSON):
+        with open(BENCH_JSON) as f:
+            existing = [r for r in json.load(f)
+                        if r.get("kind") != "serve_decode_kernel"]
+    _write_bench(existing + [rec])
+    print(f"decode-kernel smoke OK: {rec['tokens_kernel']} tokens on both "
+          f"paths over {rec['steps']} steps, comp_len="
+          f"{rec['comp_len_kernel']}, max logit diff "
+          f"{rec['max_logit_diff']:.2e} -> {BENCH_JSON}")
+
+
 if __name__ == "__main__":
     jax.config.update("jax_platform_name", "cpu")
-    if "--smoke" in sys.argv:
+    if "--smoke-decode" in sys.argv:
+        smoke_decode()
+    elif "--smoke" in sys.argv:
         smoke()
     else:
         from benchmarks.common import print_rows

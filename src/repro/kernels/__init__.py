@@ -1,12 +1,16 @@
 """Pallas TPU kernels for the performance-critical GEMMs.
 
-shgemm.py       — pl.pallas_call split-precision GEMM (the paper's §4 kernel,
-                  TPU-adapted);
-shgemm_fused.py — fused RNG+SHGEMM: Omega generated in VMEM, zero HBM bytes
-                  for the random matrix (DESIGN.md §9);
-autotune.py     — block-size sweep + persistent JSON cache;
-ops.py          — public jit wrappers; ref.py — pure-jnp oracles used by the
-                  allclose tests.
+shgemm.py          — pl.pallas_call split-precision GEMM (the paper's §4
+                     kernel, TPU-adapted);
+shgemm_fused.py    — fused RNG+SHGEMM: Omega generated in VMEM, zero HBM
+                     bytes for the random matrix (DESIGN.md §9);
+flash_attention.py — blockwise online-softmax attention;
+factored_decode.py — fused factored-prefix + dense-tail decode attention
+                     (DESIGN.md §16);
+autotune.py        — block-size sweep + persistent JSON cache (per-backend,
+                     timing-mode-tagged entries + shipped defaults);
+ops.py             — public jit wrappers; ref.py — pure-jnp oracles used by
+                     the allclose tests.
 """
 
-from repro.kernels import autotune, ops, ref, shgemm, shgemm_fused
+from repro.kernels import autotune, factored_decode, ops, ref, shgemm, shgemm_fused

@@ -73,7 +73,8 @@ def shgemm(a: jax.Array, b: jax.Array, *, blocks: tuple[int, int, int] | None = 
     if interpret is None:
         interpret = not _on_tpu()
     if blocks is None:
-        blocks = _tune.pick_blocks(m, n, k, b_dtype=b.dtype, terms=terms)
+        blocks = _tune.pick_blocks(m, n, k, b_dtype=b.dtype, terms=terms,
+                                   interpret=interpret)
     return _shgemm_padded(a, b, tuple(blocks), terms, interpret)
 
 
@@ -143,7 +144,8 @@ def shgemm_fused(a: jax.Array, key: jax.Array, n: int, *,
         interpret = not _on_tpu()
     if blocks is None:
         blocks = _tune.pick_blocks(m, n, k, b_dtype=compute_dtype,
-                                   terms=terms, fused=True)
+                                   terms=terms, fused=True,
+                                   interpret=interpret)
     bm, bn, bk = blocks
     _validate_offset("row_offset", row_offset, bk)
     # unit=1: only the >= 0 check — N-axis block boundaries never affect
@@ -186,3 +188,29 @@ def flash_attention(q, k, v, *, causal: bool = True, scale=None,
                              block_q=block, block_kv=block,
                              interpret=interpret)
     return out[:, :s]
+
+
+def factored_decode_attention(q, k, v, k_us, k_vt, v_us, v_vt, comp_len,
+                              write_pos, *, scale, cap: float = 0.0,
+                              block_kv: int | None = None,
+                              interpret: bool | None = None):
+    """Dispatching wrapper over kernels.factored_decode (DESIGN.md §16).
+
+    Same signature/semantics as the jnp oracle
+    ``models.layers.factored_decode_attention`` (which stays the default
+    serve path); this runs the fused Pallas kernel instead, in interpret
+    mode off-TPU.  ``block_kv`` comes from the autotune cache
+    (``pick_decode_block``) unless given explicitly.
+    """
+    from repro.kernels import factored_decode as fd
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, _, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    r = k_us.shape[-1]
+    if block_kv is None:
+        block_kv = _tune.pick_decode_block(skv, g, hd, r, interpret=interpret)
+    return fd.factored_decode_attention(
+        q, k, v, k_us, k_vt, v_us, v_vt, comp_len, write_pos,
+        scale=scale, cap=cap, block_kv=block_kv, interpret=interpret)

@@ -189,9 +189,21 @@ def factored_decode_attention(q, k, v, k_us, k_vt, v_us, v_vt, comp_len, *,
     vf = jnp.moveaxis(v.astype(jnp.float32), 1, 2)
 
     s_dense = jnp.einsum("bkgd,bksd->bkgs", qf, kf) * scale
-    qv = jnp.einsum("bkgd,bkrd->bkgr", qf, k_vt.astype(jnp.float32))
-    s_fact = jnp.einsum("bkgr,bksr->bkgs", qv,
-                        k_us.astype(jnp.float32)) * scale
+    # Short-circuit the factored einsums when no slot is compressed (the
+    # common dense-only batch paid ~2x score FLOPs here): with an all-False
+    # prefix mask the where() below selects s_dense everywhere and the
+    # prefix value weights are exact zeros, so a zeros placeholder is
+    # bit-identical to computing the real thing.  Only pure einsums sit
+    # inside the cond — the transcendentals (softcap/softmax) stay in the
+    # shared context so both branches produce bitwise-identical outputs.
+    any_comp = jnp.any(comp_len > 0)
+    s_fact = jax.lax.cond(
+        any_comp,
+        lambda: jnp.einsum(
+            "bkgr,bksr->bkgs",
+            jnp.einsum("bkgd,bkrd->bkgr", qf, k_vt.astype(jnp.float32)),
+            k_us.astype(jnp.float32)) * scale,
+        lambda: jnp.zeros_like(s_dense))
     idx = jnp.arange(skv, dtype=jnp.int32)
     prefix = idx[None, :] < comp_len[:, None]              # (B, S)
     valid = jnp.broadcast_to(idx[None, :] <= write_pos, prefix.shape)
@@ -202,8 +214,13 @@ def factored_decode_attention(q, k, v, k_us, k_vt, v_us, v_vt, comp_len, *,
 
     w_pre = probs * prefix[:, None, None]
     w_tail = probs * (valid & ~prefix)[:, None, None]
-    out = jnp.einsum("bkgs,bksr->bkgr", w_pre, v_us.astype(jnp.float32))
-    out = jnp.einsum("bkgr,bkrd->bkgd", out, v_vt.astype(jnp.float32))
+    out = jax.lax.cond(
+        any_comp,
+        lambda: jnp.einsum(
+            "bkgr,bkrd->bkgd",
+            jnp.einsum("bkgs,bksr->bkgr", w_pre, v_us.astype(jnp.float32)),
+            v_vt.astype(jnp.float32)),
+        lambda: jnp.zeros_like(qf))
     out = out + jnp.einsum("bkgs,bksd->bkgd", w_tail, vf)
     return out.reshape(b, sq, h, hd).astype(q.dtype)
 

@@ -381,10 +381,19 @@ def _attn_with_cache(cfg, spec, p, h, *, positions, cache, write_pos,
             # the factors and the tail through the cache, in one softmax.
             # Only full-context layers carry factors (cache.build_kv_factors
             # eligibility), so the window mask never binds here.
-            out = L.factored_decode_attention(
-                q, kv.k, kv.v, factors["k_us"], factors["k_vt"],
-                factors["v_us"], factors["v_vt"], comp_len,
-                write_pos=write_pos, scale=scale, cap=cfg.attn_softcap)
+            if cfg.use_flash_kernel:
+                # fused Pallas kernel (kernels/factored_decode.py); the jnp
+                # path below is its reference oracle (DESIGN.md §16)
+                from repro.kernels import ops as kops
+                out = kops.factored_decode_attention(
+                    q, kv.k, kv.v, factors["k_us"], factors["k_vt"],
+                    factors["v_us"], factors["v_vt"], comp_len, write_pos,
+                    scale=scale, cap=cfg.attn_softcap)
+            else:
+                out = L.factored_decode_attention(
+                    q, kv.k, kv.v, factors["k_us"], factors["k_vt"],
+                    factors["v_us"], factors["v_vt"], comp_len,
+                    write_pos=write_pos, scale=scale, cap=cfg.attn_softcap)
         else:
             out = L.attention(q, kv.k.astype(dt), kv.v.astype(dt),
                               causal=causal, window=spec.window, scale=scale,

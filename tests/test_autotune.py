@@ -111,6 +111,111 @@ def test_pick_blocks_uses_cache(tmp_path, monkeypatch):
         autotune.heuristic_blocks(m, n, k)
 
 
+# ---------------------------------------------------------------------------
+# Timing-mode tagging: interpret-mode winners must not poison real backends
+# ---------------------------------------------------------------------------
+
+def test_interpret_entries_refused_on_compiled_backend(tmp_path, monkeypatch):
+    """Regression (ISSUE 8 satellite): entries timed in interpret mode —
+    all this container can produce — persisted untagged and were served as
+    tuned winners on real TPU/GPU runs.  Now they carry ``mode`` and a
+    compiled-mode pick falls back to the heuristic instead."""
+    cache_file = str(tmp_path / "autotune.json")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", cache_file)
+    m, n, k = 48, 96, 200
+    tuned = (8, 128, 128)
+    autotune.autotune_blocks(m, n, k, candidates=[tuned],
+                             time_fn=lambda *a: 1.0, cache_file=cache_file)
+    with open(cache_file) as f:
+        entry = json.load(f)[autotune.cache_key(m, n, k, jnp.bfloat16, 2,
+                                                False)]
+    assert entry["mode"] == "interpret"  # timed on this CPU container
+    assert entry["platform"] == jax.default_backend()
+    # interpret-mode pick (this container's dispatch) may serve it...
+    assert autotune.pick_blocks(m, n, k, interpret=True) == tuned
+    # ...a compiled run must NOT — heuristic fallback, not a poisoned win
+    assert autotune.pick_blocks(m, n, k, interpret=False) == \
+        autotune.heuristic_blocks(m, n, k)
+
+
+def test_legacy_untagged_and_shipped_entries(tmp_path, monkeypatch):
+    """Legacy entries (no ``mode``) might be interpret-timed -> refused on
+    compiled backends; curated ``shipped`` defaults are accepted there."""
+    cache_file = str(tmp_path / "autotune.json")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", cache_file)
+    m, n, k = 64, 128, 256
+    key_legacy = autotune.cache_key(m, n, k, jnp.bfloat16, 2, False)
+    key_shipped = autotune.cache_key(m, n, k, jnp.bfloat16, 2, True)
+    with open(cache_file, "w") as f:
+        json.dump({key_legacy: {"blocks": [8, 128, 128]},
+                   key_shipped: {"blocks": [16, 128, 128],
+                                 "mode": "shipped"}}, f)
+    assert autotune.pick_blocks(m, n, k, interpret=False) == \
+        autotune.heuristic_blocks(m, n, k)
+    assert autotune.pick_blocks(m, n, k, interpret=True) == (8, 128, 128)
+    assert autotune.pick_blocks(m, n, k, fused=True,
+                                interpret=False) == (16, 128, 128)
+
+
+def test_shipped_default_cache_is_wellformed():
+    """The checked-in default cache: every entry is ``shipped``-tagged (so
+    compiled backends may consume it) and carries the right payload for its
+    key family."""
+    import os
+    assert os.path.exists(autotune.default_cache_path())
+    shipped = autotune._load_shipped()
+    assert shipped, "shipped default cache is empty"
+    for key, entry in shipped.items():
+        assert entry["mode"] == "shipped", key
+        if ":fdec:" in key:
+            assert int(entry["block_kv"]) in autotune.DECODE_CANDIDATES, key
+        else:
+            assert len(entry["blocks"]) == 3, key
+
+
+# ---------------------------------------------------------------------------
+# Factored-decode kernel block space
+# ---------------------------------------------------------------------------
+
+def test_autotune_decode_block_cache_and_mode(tmp_path, monkeypatch):
+    cache_file = str(tmp_path / "autotune.json")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", cache_file)
+    calls = []
+
+    def fake_timer(s, g, hd, r, blk):
+        calls.append(blk)
+        return float(blk)  # prefer the smallest block
+
+    s, g, hd, r = 4096, 4, 128, 16
+    blk, hit = autotune.autotune_decode_block(
+        s, g, hd, r, time_fn=fake_timer, cache_file=cache_file)
+    assert not hit and blk == min(autotune.candidate_decode_blocks(s))
+    n_timed = len(calls)
+    blk2, hit2 = autotune.autotune_decode_block(
+        s, g, hd, r, time_fn=fake_timer, cache_file=cache_file)
+    assert hit2 and blk2 == blk and len(calls) == n_timed
+
+    # interpret-tagged winner: served to interpret picks, not compiled ones
+    assert autotune.pick_decode_block(s, g, hd, r, interpret=True) == blk
+    assert autotune.pick_decode_block(s, g, hd, r, interpret=False) == \
+        autotune.heuristic_decode_block(s)
+    # untuned shape -> heuristic
+    assert autotune.pick_decode_block(96, g, hd, r) == 96
+
+
+def test_pick_decode_block_clamps_to_cache_len(tmp_path, monkeypatch):
+    """A tuned wide block must be clamped for shorter caches sharing the
+    key only through explicit tuning — i.e. the clamp applies when the
+    tuned block exceeds the rounded-up cache length."""
+    cache_file = str(tmp_path / "autotune.json")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", cache_file)
+    s, g, hd, r = 96, 4, 128, 16
+    with open(cache_file, "w") as f:
+        json.dump({autotune.decode_cache_key(s, g, hd, r):
+                   {"block_kv": 512, "mode": "shipped"}}, f)
+    assert autotune.pick_decode_block(s, g, hd, r, interpret=False) == 96
+
+
 def test_shgemm_tuned_blocks_match_default():
     """Whatever tiling the autotuner picks, the numbers only move by f32
     accumulation order — tuning is accuracy-neutral."""
