@@ -447,6 +447,62 @@ def resilience_rows(records=None, *, m=96, n=64, rank=8, tile=16,
         f"elastic_goodput={rec['elastic_goodput']}")]
 
 
+def structured_kr_rows(records=None, *, dims=(64, 12, 10, 8),
+                       gen_ranks=(8, 7, 6, 6), ranks=(6, 5, 4, 4),
+                       tile=16) -> list:
+    """Khatri–Rao structured-Omega row (kind "structured_kr"):
+    ``rp_sthosvd_streamed(dist="khatri_rao")`` on an axis-0-slabbed tensor,
+    with the ``core.structured.record_shapes`` probe asserting that no
+    contraction intermediate ever carries an unfolding's column dimension
+    — the object one-shot RP-HOSVD materializes as its largest operand —
+    plus accuracy parity against the unstructured gaussian streamed run."""
+    from repro.core import hosvd, structured
+
+    key = jax.random.PRNGKey(9)
+    a = hosvd.make_test_tensor(jax.random.fold_in(key, 0), dims, gen_ranks)
+    m = dims[0]
+    slabs = lambda: (a[i:i + tile] for i in range(0, m, tile))
+
+    t0 = time.perf_counter()
+    with structured.record_shapes() as shapes:
+        res_kr = hosvd.rp_sthosvd_streamed(key, slabs, dims=dims,
+                                           ranks=ranks, dist="khatri_rao")
+    dt = time.perf_counter() - t0
+    assert shapes, "shape probe recorded no KR intermediates"
+    # every unfolding's column count (what the dense mode sketch contracts
+    # against — per-slab for mode 0, full-tensor otherwise)
+    slab_dims = (tile,) + tuple(dims[1:])
+    unfold_cols = {
+        i: int(np.prod([d for j, d in enumerate(
+            slab_dims if i == 0 else dims) if j != i]))
+        for i in range(len(dims))}
+    min_unfold = min(unfold_cols.values())
+    max_inter = max(int(np.prod(s[1:])) for s in shapes)
+    assert max_inter < min_unfold, (
+        f"a KR intermediate carries {max_inter} non-leading elements, >= "
+        f"the smallest unfolding width {min_unfold}")
+
+    res_g = hosvd.rp_sthosvd_streamed(key, slabs, dims=dims, ranks=ranks,
+                                      dist="gaussian")
+    err_kr = float(hosvd.reconstruction_error(a, res_kr))
+    err_g = float(hosvd.reconstruction_error(a, res_g))
+
+    rec = {
+        "kind": "structured_kr", "dims": list(dims), "ranks": list(ranks),
+        "tile": tile, "us": round(dt * 1e6, 2),
+        "err_khatri_rao": err_kr, "err_gaussian": err_g,
+        "max_intermediate_nonlead_elems": max_inter,
+        "unfold_cols": {str(k): v for k, v in unfold_cols.items()},
+        "probe_shapes": [list(s) for s in shapes[:12]],
+    }
+    if records is not None:
+        records.append(rec)
+    return [row(
+        f"stream.structured_kr.{'x'.join(map(str, dims))}", dt * 1e6,
+        f"err_kr={err_kr:.2e};err_gauss={err_g:.2e};"
+        f"max_intermediate={max_inter};min_unfold_cols={min_unfold}")]
+
+
 def _merge_bench_json(records, kinds) -> None:
     """Replace records of ``kinds`` in BENCH_stream.json, keep the rest —
     smoke steps must not clobber the full run()'s rows."""
@@ -469,7 +525,8 @@ def run() -> list:
             + memmap_source_rows(records=records)
             + adaptive_rsvd_rows(records=records)
             + kv_serving_rows(records=records)
-            + resilience_rows(records=records))
+            + resilience_rows(records=records)
+            + structured_kr_rows(records=records))
     with open(BENCH_JSON, "w") as f:
         json.dump(records, f, indent=1)
     rows.append(row("stream.bench_json.written", 0.0, BENCH_JSON))
@@ -590,6 +647,35 @@ def smoke_kv() -> None:
           f"{BENCH_JSON}")
 
 
+def smoke_structured() -> None:
+    """CI `structured` smoke (DESIGN.md §17): the SRHT row (BENCH_shgemm:
+    O(n log n) apply FLOPs < GEMM FLOPs, dense-oracle agreement <= 1e-5,
+    rSVD accuracy parity within the documented factor — all asserted inside
+    ``shgemm_bench.structured_rows``) plus the Khatri–Rao row (BENCH_stream:
+    no intermediate carries an unfolding's column dimension, accuracy
+    parity vs gaussian).  Seconds, not minutes."""
+    from benchmarks import shgemm_bench
+
+    srht_recs = []
+    shgemm_bench.structured_rows(records=srht_recs)
+    shgemm_bench._merge_bench_json(srht_recs, {"structured_srht"})
+
+    records = []
+    structured_kr_rows(records=records)
+    _merge_bench_json(records, {"structured_kr"})
+
+    sr, kr = srht_recs[0], records[0]
+    assert kr["err_khatri_rao"] <= max(10 * kr["err_gaussian"], 1e-3), kr
+    print(f"structured smoke OK: srht flops {sr['apply_flops_srht']} < gemm "
+          f"{sr['apply_flops_gemm']} ({sr['flops_ratio']}x), oracle rel "
+          f"{sr['oracle_rel_err']:.2e} <= 1e-5, rsvd err "
+          f"{sr['rsvd_err_srht']:.2e} vs gaussian "
+          f"{sr['rsvd_err_gaussian']:.2e} (<= {sr['accuracy_factor_tolerance']}x); "
+          f"kr max intermediate {kr['max_intermediate_nonlead_elems']} elems, "
+          f"err {kr['err_khatri_rao']:.2e} vs {kr['err_gaussian']:.2e} -> "
+          f"{shgemm_bench.BENCH_JSON} + {BENCH_JSON}")
+
+
 def smoke_resilience() -> None:
     """CI `resilience` smoke: the kill-and-resume cycle above —
     ``resilience_rows`` asserts the acceptance criteria (SIGKILLed attempt
@@ -618,6 +704,8 @@ if __name__ == "__main__":
         smoke_kv()
     elif "--smoke-resilience" in sys.argv:
         smoke_resilience()
+    elif "--smoke-structured" in sys.argv:
+        smoke_structured()
     elif "--smoke" in sys.argv:
         smoke()
     else:

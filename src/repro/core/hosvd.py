@@ -49,9 +49,30 @@ def mode_dot(t: jax.Array, m: jax.Array, mode: int) -> jax.Array:
     return fold(res, mode, new_shape)
 
 
-@functools.partial(jax.jit, static_argnames=("ranks", "method", "omega_dtype"))
+def _mode_sketch(key: jax.Array, core: jax.Array, i: int, rank: int, *,
+                 method, dist, omega_dtype) -> jax.Array:
+    """W = A_(i) · Omega_i for one mode — the per-mode hot GEMM, or the
+    Khatri–Rao factor-by-factor contraction that replaces it.
+
+    ``dist="khatri_rao"`` (Tensorized Random Projections, arXiv 2003.05101)
+    never forms the (I_i, prod I_k) unfolding OR the (prod I_k, J_i) Omega:
+    the tensor is contracted against small per-mode factors, so no
+    intermediate carries the unfolding's column dimension."""
+    if dist == "khatri_rao":
+        from repro.core import structured as _sx
+        kro = _sx.KhatriRaoOmega(key=key, dims=tuple(core.shape), mode=i,
+                                 p=rank)
+        return kro.sketch_slab(core)
+    unf = unfold(core, i)                        # (I_i, prod I_k)
+    return proj.sketch(key, unf, rank, method=method, dist=dist,
+                       omega_dtype=omega_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("ranks", "method", "dist",
+                                             "omega_dtype"))
 def rp_hosvd(key: jax.Array, a: jax.Array, ranks: tuple[int, ...], *,
              method: proj.ProjectionMethod = "shgemm",
+             dist: proj.SketchDist = "gaussian",
              omega_dtype=jnp.bfloat16) -> TuckerResult:
     """Paper Algorithm 2.
 
@@ -62,12 +83,12 @@ def rp_hosvd(key: jax.Array, a: jax.Array, ranks: tuple[int, ...], *,
     keys = jax.random.split(key, a.ndim)
     factors = []
     for i in range(a.ndim):
-        unf = unfold(a, i)                       # (I_i, prod I_k)
         # line 2 — the hot GEMM; key-based so method="shgemm_fused" streams
         # Omega_(i) out of the hash instead of HBM (it is the *largest*
-        # operand here: prod_{k!=i} I_k rows).
-        w = proj.sketch(keys[i], unf, ranks[i], method=method,
-                        omega_dtype=omega_dtype)
+        # operand here: prod_{k!=i} I_k rows), and dist="khatri_rao" skips
+        # the unfolding-width contraction entirely (_mode_sketch).
+        w = _mode_sketch(keys[i], a, i, ranks[i], method=method, dist=dist,
+                         omega_dtype=omega_dtype)
         q, _ = jnp.linalg.qr(w)                  # line 3
         factors.append(q)
     core = a
@@ -76,9 +97,11 @@ def rp_hosvd(key: jax.Array, a: jax.Array, ranks: tuple[int, ...], *,
     return TuckerResult(core, tuple(factors))
 
 
-@functools.partial(jax.jit, static_argnames=("ranks", "method", "omega_dtype"))
+@functools.partial(jax.jit, static_argnames=("ranks", "method", "dist",
+                                             "omega_dtype"))
 def rp_sthosvd(key: jax.Array, a: jax.Array, ranks: tuple[int, ...], *,
                method: proj.ProjectionMethod = "shgemm",
+               dist: proj.SketchDist = "gaussian",
                omega_dtype=jnp.bfloat16) -> TuckerResult:
     """Sequentially-truncated variant (beyond-paper: each mode's projection
     operates on the already-compressed tensor, cutting the later GEMMs)."""
@@ -86,9 +109,8 @@ def rp_sthosvd(key: jax.Array, a: jax.Array, ranks: tuple[int, ...], *,
     keys = jax.random.split(key, a.ndim)
     factors = []
     for i in range(a.ndim):
-        unf = unfold(core, i)
-        w = proj.sketch(keys[i], unf, ranks[i], method=method,
-                        omega_dtype=omega_dtype)
+        w = _mode_sketch(keys[i], core, i, ranks[i], method=method,
+                         dist=dist, omega_dtype=omega_dtype)
         q, _ = jnp.linalg.qr(w)
         factors.append(q)
         core = mode_dot(core, q.T, i)

@@ -18,7 +18,9 @@ Methods:
                        the materialized Pallas kernel.
 
 Random matrices: Gaussian (stored f32/bf16/fp16), Achlioptas sparse {-1,0,+1}
-(Eq. 5), very-sparse (Li et al.).
+(Eq. 5), very-sparse (Li et al., s = sqrt(n) of the data dimension), and
+SRHT (structured — ``sketch(dist="srht")`` applies in O(n log n) via
+core/structured.py and never runs a GEMM at all).
 """
 
 from __future__ import annotations
@@ -33,7 +35,7 @@ from repro.core.splitting import FP16_INV_SCALE, split_fp32
 
 ProjectionMethod = Literal["f32", "lowp_single", "shgemm", "shgemm3",
                            "shgemm_pallas", "shgemm_fused"]
-SketchDist = Literal["gaussian", "achlioptas", "very_sparse"]
+SketchDist = Literal["gaussian", "achlioptas", "very_sparse", "srht"]
 
 
 # ---------------------------------------------------------------------------
@@ -72,24 +74,42 @@ def achlioptas_sparse(key: jax.Array, shape: tuple[int, ...], s: float = 3.0,
     return v.astype(dtype)
 
 
-def very_sparse(key: jax.Array, shape: tuple[int, ...], dtype=jnp.bfloat16) -> jax.Array:
-    """Li et al. very sparse projection: s = sqrt(n)."""
-    n = shape[0]
-    return achlioptas_sparse(key, shape, s=float(jnp.sqrt(n)), dtype=dtype)
+def very_sparse(key: jax.Array, shape: tuple[int, ...],
+                s: float | None = None, dtype=jnp.bfloat16) -> jax.Array:
+    """Li et al. very sparse projection: s = sqrt(n) with n the DATA
+    dimension (Omega's global row count).  The default is resolved through
+    the fused kernel's ``_resolve_s`` (f64 ``math.sqrt``) so both paths
+    share a bitwise-identical threshold; callers generating a partial row
+    block must pass the global dimension's ``s`` explicitly."""
+    from repro.kernels import shgemm_fused as _f
+    return achlioptas_sparse(key, shape,
+                             s=_f._resolve_s("very_sparse", s, shape[0]),
+                             dtype=dtype)
 
 
 def materialize_omega(key: jax.Array, shape: tuple[int, int], *,
-                      dist: SketchDist = "gaussian",
+                      dist: SketchDist = "gaussian", s: float | None = None,
                       dtype=jnp.bfloat16) -> jax.Array:
     """The legacy jax.random Omega for ``dist`` — the single dispatch shared
     by ``sketch`` and the streaming subsystem's non-fused partial-width
-    updates (repro.stream), so the two can never draw different streams."""
+    updates (repro.stream), so the two can never draw different streams.
+
+    ``s`` overrides the sparse dists' sparsity parameter (same semantics as
+    ``fused_omega``/``ops.shgemm_fused``: explicit s wins, so partial tiles
+    can match a one-shot sketch with non-default sparsity).  For ``srht``
+    the dense matrix is the counter-lattice oracle from core/structured.py
+    — identical to what the O(n log n) apply path implicitly applies.
+    """
     if dist == "gaussian":
         return gaussian(key, shape, dtype=dtype)
     if dist == "achlioptas":
-        return achlioptas_sparse(key, shape, dtype=dtype)
+        return achlioptas_sparse(key, shape, s=(3.0 if s is None else s),
+                                 dtype=dtype)
     if dist == "very_sparse":
-        return very_sparse(key, shape, dtype=dtype)
+        return very_sparse(key, shape, s=s, dtype=dtype)
+    if dist == "srht":
+        from repro.core import structured as _s
+        return _s.srht_omega(key, shape, dtype=dtype)
     raise ValueError(f"unknown sketch distribution {dist!r}")
 
 
@@ -166,11 +186,11 @@ def project(a: jax.Array, omega: jax.Array,
     raise ValueError(f"unknown projection method {method!r}")
 
 
-@functools.partial(jax.jit, static_argnames=("p", "method", "dist",
+@functools.partial(jax.jit, static_argnames=("p", "method", "dist", "s",
                                              "omega_dtype"))
 def sketch(key: jax.Array, a: jax.Array, p: int, *,
            method: ProjectionMethod = "shgemm",
-           dist: SketchDist = "gaussian",
+           dist: SketchDist = "gaussian", s: float | None = None,
            omega_dtype=jnp.bfloat16) -> jax.Array:
     """Y = A @ Omega(key)[a.shape[1], p] without the caller materializing
     Omega.
@@ -178,16 +198,27 @@ def sketch(key: jax.Array, a: jax.Array, p: int, *,
     This is the key-based front door for all RandNLA consumers (rsvd, hosvd,
     lstsq, galore):
 
+      * ``dist="srht"`` — structured fast path: sign-flip + FWHT + column
+        gather (core/structured.py), O(n log n) adds and NO (n x p) GEMM,
+        regardless of ``method`` (there is no GEMM for the method to run;
+        the heavy operand the mixed-precision split targets never exists).
       * ``method="shgemm_fused"`` — Omega costs zero HBM bytes: tiles are
         hashed into VMEM inside the Pallas kernel.
       * any other method — Omega is generated with the classic jax.random
         stream exactly as the consumers did before and fed to ``project``,
         so legacy results are unchanged.
+
+    ``s`` (static) overrides the sparse dists' sparsity on BOTH the fused
+    and legacy paths — previously only the fused kernel accepted it, so the
+    two front doors silently diverged for non-default sparsity.
     """
+    if dist == "srht":
+        from repro.core import structured as _s
+        return _s.srht_sketch(key, a, p)
     if method == "shgemm_fused":
         from repro.kernels import ops
         return ops.shgemm_fused(a.astype(jnp.float32), key, p, dist=dist,
-                                omega_dtype=omega_dtype)
-    omega = materialize_omega(key, (a.shape[1], p), dist=dist,
+                                s=s, omega_dtype=omega_dtype)
+    omega = materialize_omega(key, (a.shape[1], p), dist=dist, s=s,
                               dtype=omega_dtype)
     return project(a, omega, method=method)

@@ -29,8 +29,11 @@ class AdaptiveInfo(NamedTuple):
     (DESIGN.md §13).  ``est_history`` holds the relative posterior error
     estimate after each B pass (one entry per evaluated width);
     ``bound_history`` the matching relative Halko Eq. (4) expected-error
-    bound (None where the width leaves oversample < 2).  The byte counters
-    are what the widen passes actually wrote to Y
+    bound — None where the width leaves oversample < 2, and None at EVERY
+    width for non-Gaussian families (Eq. 4 is a theorem about Gaussian test
+    matrices; ``bound_reason`` carries the documented reason from
+    ``core.structured.ESTIMATOR_VALIDITY``, None when the bound applies).
+    The byte counters are what the widen passes actually wrote to Y
     (``grown_sketch_bytes``) vs what re-sketching from scratch at each
     grown width would have written (``full_resketch_bytes``) — the
     added-columns-only scaling the bench asserts."""
@@ -42,6 +45,7 @@ class AdaptiveInfo(NamedTuple):
     grown_cols: int
     grown_sketch_bytes: int
     full_resketch_bytes: int
+    bound_reason: str | None = None
 
 
 def _dot(a, b):
@@ -64,10 +68,12 @@ def _check_rank(rank: int, m: int, n: int) -> None:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("rank", "oversample", "power_iters", "method", "omega_dtype"),
+    static_argnames=("rank", "oversample", "power_iters", "method", "dist",
+                     "omega_dtype"),
 )
 def rsvd(key: jax.Array, a: jax.Array, rank: int, *, oversample: int = 10,
          power_iters: int = 0, method: proj.ProjectionMethod = "shgemm",
+         dist: proj.SketchDist = "gaussian",
          omega_dtype=jnp.bfloat16) -> SVDResult:
     """p-rank randomized SVD of ``a`` (paper Algorithm 1).
 
@@ -75,6 +81,9 @@ def rsvd(key: jax.Array, a: jax.Array, rank: int, *, oversample: int = 10,
     p_hat = rank + oversample.
     power_iters: q power iterations (A A^T)^q A Omega for slowly decaying
     spectra (§2.1); the extra passes run in f32.
+    dist: Omega family — unstructured (gaussian/achlioptas/very_sparse) or
+    ``"srht"``, which replaces the line-1 GEMM with the O(n log n)
+    structured apply (core/structured.py).
     """
     m, n = a.shape
     _check_rank(rank, m, n)
@@ -83,7 +92,8 @@ def rsvd(key: jax.Array, a: jax.Array, rank: int, *, oversample: int = 10,
     # Line 1: Y = A . Omega — THE mixed-precision projection.  Key-based:
     # with method="shgemm_fused" Omega is generated inside the kernel and
     # never materialized (zero HBM bytes for the random matrix).
-    y = proj.sketch(key, a, p_hat, method=method, omega_dtype=omega_dtype)
+    y = proj.sketch(key, a, p_hat, method=method, dist=dist,
+                    omega_dtype=omega_dtype)
 
     # Power scheme: re-orthonormalize between passes for stability.
     for _ in range(power_iters):
@@ -107,6 +117,7 @@ def rsvd_streamed(key: jax.Array, a_blocks, rank: int, *,
                   n_rows: int | None = None, n_cols: int | None = None,
                   oversample: int = 10, passes: int = 2,
                   method: proj.ProjectionMethod = "shgemm_fused",
+                  dist: proj.SketchDist = "gaussian",
                   omega_dtype=jnp.bfloat16, tile_callback=None,
                   prefetch_depth: int | None = 1,
                   tol: float | None = None,
@@ -306,7 +317,7 @@ def rsvd_streamed(key: jax.Array, a_blocks, rank: int, *,
             "job": "rsvd_streamed",
             "key": resil.key_fingerprint(key),
             "rank": int(rank), "p_hat": int(p_hat), "passes": int(passes),
-            "method": str(method),
+            "method": str(method), "dist": str(dist),
             "omega_dtype": str(jnp.dtype(omega_dtype)),
             "n_rows": int(n_rows), "n_cols": int(n_cols),
         }
@@ -341,7 +352,7 @@ def rsvd_streamed(key: jax.Array, a_blocks, rank: int, *,
                                f"unknown phase {restored.phase!r}")
     if restored is None:
         state = stream.init(key, n_cols, p_hat, max_rows=n_rows,
-                            left=(passes == 1), method=method,
+                            left=(passes == 1), method=method, dist=dist,
                             omega_dtype=omega_dtype)
 
     fro2 = jnp.zeros((), jnp.float32)   # ||A||_F² for the posterior estimate
@@ -377,8 +388,8 @@ def rsvd_streamed(key: jax.Array, a_blocks, rank: int, *,
         return _adaptive_rsvd(
             stream, key, state, rank, tol=tol, p_cap=p_cap, fro2=fro2,
             tiles=tiles, accumulate_b=accumulate_b, n_rows=n_rows,
-            n_cols=n_cols, method=method, omega_dtype=omega_dtype,
-            return_info=return_info)
+            n_cols=n_cols, method=method, dist=dist,
+            omega_dtype=omega_dtype, return_info=return_info)
 
     if ck is not None and passes == 2 and power_resume is None:
         # checkpointed B pass, tile granularity: B's f32 summation is
@@ -445,18 +456,30 @@ def rsvd_streamed(key: jax.Array, a_blocks, rank: int, *,
 
 
 def _adaptive_rsvd(stream, key, state, rank, *, tol, p_cap, fro2, tiles,
-                   accumulate_b, n_rows, n_cols, method, omega_dtype,
+                   accumulate_b, n_rows, n_cols, method, dist, omega_dtype,
                    return_info):
     """Rank-revealing widening loop behind ``rsvd_streamed(tol=...)``
     (DESIGN.md §13).  One B = QᵀA replay per evaluated width gives the
     EXACT truncation error; while it exceeds ``tol`` the sketch doubles
     its oversampling — incrementally (``SketchState.widen`` + replay over
     only the new Omega columns) for the fused lattice, by re-sketching at
-    the new width for legacy jax.random streams.  Either way the working
-    state stays bit-identical to a fresh sketch at its width, so the
-    final factorization equals the non-adaptive two-pass run at the final
-    oversampling bit for bit."""
+    the new width for legacy jax.random streams AND for SRHT (every SRHT
+    entry carries a 1/sqrt(p) scale tied to the total width, so there are
+    no shared columns to extend).  Either way the working state stays
+    bit-identical to a fresh sketch at its width, so the final
+    factorization equals the non-adaptive two-pass run at the final
+    oversampling bit for bit.
+
+    Estimator validity (DESIGN.md §17): the stopping rule above is the
+    EXACT posterior estimate — valid for every Omega family (it only needs
+    Q orthonormal).  The Halko Eq. (4) diagnostic is a Gaussian-family
+    theorem, so it is reported only for ``dist="gaussian"``; other families
+    get None entries plus the documented reason in
+    ``AdaptiveInfo.bound_reason`` (core.structured.ESTIMATOR_VALIDITY).
+    """
+    from repro.core import structured as _sx
     fro2 = jnp.maximum(fro2, jnp.float32(0))
+    bound_ok = _sx.halko_bound_valid(dist)
     est_hist, bound_hist = [], []
     widen_passes = grown_cols = grown_bytes = full_bytes = 0
     while True:
@@ -470,13 +493,13 @@ def _adaptive_rsvd(stream, key, state, rank, *, tol, p_cap, fro2, tiles,
         s_now = state.p - rank
         bound_hist.append(
             float(halko_bound(jnp.linalg.norm(sv[rank:]), rank, s_now)
-                  / denom) if s_now >= 2 else None)
+                  / denom) if bound_ok and s_now >= 2 else None)
         converged = est <= tol
         if converged or state.p >= p_cap:
             break
         extra = min(state.p, p_cap - state.p)   # double the width, capped
         p_new = state.p + extra
-        if method == "shgemm_fused":
+        if method == "shgemm_fused" and dist != "srht":
             # replay sketches ONLY the new lattice columns: O(extra) work
             ext = state.widen(extra)
             for _, off, blk in tiles():
@@ -484,11 +507,13 @@ def _adaptive_rsvd(stream, key, state, rank, *, tol, p_cap, fro2, tiles,
             state = stream.hstack(state, ext)
             grown_bytes += 4 * n_rows * extra
         else:
-            # legacy jax.random Omega is a function of its full shape —
-            # a fresh draw at p_new shares no columns with the old one,
-            # so bit-identity to a fresh sketch demands a full re-sketch
+            # legacy jax.random Omega is a function of its full shape (and
+            # SRHT of its full width) — a fresh draw at p_new shares no
+            # columns with the old one, so bit-identity to a fresh sketch
+            # demands a full re-sketch
             state = stream.init(key, n_cols, p_new, max_rows=n_rows,
-                                method=method, omega_dtype=omega_dtype)
+                                method=method, dist=dist,
+                                omega_dtype=omega_dtype)
             for _, off, blk in tiles():
                 state = stream.update(state, blk, off)
             grown_bytes += 4 * n_rows * p_new
@@ -503,7 +528,8 @@ def _adaptive_rsvd(stream, key, state, rank, *, tol, p_cap, fro2, tiles,
         final_p=state.p, widen_passes=widen_passes, converged=converged,
         est_history=tuple(est_hist), bound_history=tuple(bound_hist),
         grown_cols=grown_cols, grown_sketch_bytes=grown_bytes,
-        full_resketch_bytes=full_bytes)
+        full_resketch_bytes=full_bytes,
+        bound_reason=_sx.bound_invalid_reason(dist))
 
 
 def streamed_power_factor(q: jax.Array, rank: int, passes: int, *,
@@ -568,15 +594,17 @@ def streamed_power_factor(q: jax.Array, rank: int, passes: int, *,
 
 
 @functools.partial(jax.jit, static_argnames=("rank", "oversample", "method",
-                                             "omega_dtype"))
+                                             "dist", "omega_dtype"))
 def range_finder(key: jax.Array, a: jax.Array, rank: int, *, oversample: int = 10,
                  method: proj.ProjectionMethod = "shgemm",
+                 dist: proj.SketchDist = "gaussian",
                  omega_dtype=jnp.bfloat16) -> jax.Array:
     """Return Q with orthonormal columns s.t. A ~ Q Q^T A (Eq. 3)."""
     m, n = a.shape
     _check_rank(rank, m, n)
     p_hat = min(rank + oversample, min(m, n))
-    y = proj.sketch(key, a, p_hat, method=method, omega_dtype=omega_dtype)
+    y = proj.sketch(key, a, p_hat, method=method, dist=dist,
+                    omega_dtype=omega_dtype)
     q, _ = jnp.linalg.qr(y)
     return q
 

@@ -1,0 +1,381 @@
+"""Structured random-projection families on the counter lattice
+(DESIGN.md §17).
+
+The Gaussian/Achlioptas/very-sparse Omegas are *unstructured*: every entry
+is an independent draw, and applying one costs a full GEMM.  The two
+families here keep the fused stream's determinism contract — every Omega
+element is a pure function of ``(key, global row, col)`` — while cutting
+the *apply* cost structurally:
+
+  * **SRHT** (sub-sampled randomized Hadamard transform):
+    ``Omega = D · H_L · S / sqrt(p)`` with ``D`` a random ±1 diagonal
+    (counter-hashed per row), ``H_L`` the unnormalized Sylvester–Hadamard
+    matrix of length ``L = next_pow2(n)``, and ``S`` a with-replacement
+    column subsample (each sketch column ``j`` hashes its own Hadamard
+    column index, so columns stay pure functions of ``(key, col)``).
+    Every entry is ±1/sqrt(p), so ``E[Omega Omega^T] = I`` on the padded
+    space; the apply path is sign-flip + FWHT + gather — O(m·L·log L)
+    adds instead of the 2·m·n·p-FLOP GEMM, and no (n × p) matrix is ever
+    materialized.  NOTE the 1/sqrt(p) scale ties every entry to the TOTAL
+    sketch width: a width-p SRHT shares no columns with a width-(p+e)
+    one, which is why ``SketchState.widen`` refuses the family (the
+    adaptive drivers re-sketch at the new width instead).
+
+  * **Khatri–Rao** ("Tensorized Random Projections", arXiv 2003.05101):
+    the mode-``i`` test matrix of a tensor is the column-wise Kronecker
+    (Khatri–Rao) product of small per-mode Gaussian factors
+    ``f_j in R^{I_j x p}`` for ``j != i`` —
+    ``Omega_i[(r_{j1}, r_{j2}, ...), c] = prod_j f_j[r_j, c]``.  The
+    mode-``i`` sketch ``A_(i) · Omega_i`` contracts the tensor
+    factor-by-factor, so no array with the unfolding's column dimension
+    ``prod_{j != i} I_j`` (the largest object in one-shot RP-HOSVD) is
+    ever materialized; each factor is regenerated block-wise from the
+    counter lattice, so streamed slabs at arbitrary row offsets draw
+    bit-identical factor rows.
+
+Also here: the per-family *estimator validity* table (the
+Pearce–Martinsson survey, arXiv 2512.05286, catalogs which error
+estimators remain valid per test-matrix family).  The EXACT posterior
+truncation-error estimate used by the adaptive drivers
+(||A||² − Σσ²(QᵀA), valid for any orthonormal Q however it was produced)
+holds for every family; the Halko Eq. (4) expected-error *prior* bound is
+a theorem about Gaussian test matrices only, so the adaptive driver gates
+its diagnostic on this table (``core/rsvd.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import shgemm_fused as _kf
+
+# Counter-hash draw streams (kernels/shgemm_fused.py uses 0/1 for the
+# unstructured dists; SRHT claims its own so the sign diagonal and the
+# column subsample never alias a Gaussian/Achlioptas draw).
+SRHT_SIGN_STREAM = 4
+SRHT_INDEX_STREAM = 5
+
+STRUCTURED_DISTS = ("srht", "khatri_rao")
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (the SRHT transform length)."""
+    if n < 1:
+        raise ValueError(f"need n >= 1, got {n}")
+    return 1 << (int(n) - 1).bit_length()
+
+
+# ---------------------------------------------------------------------------
+# Fast Walsh–Hadamard transform
+# ---------------------------------------------------------------------------
+
+def fwht(x: jax.Array) -> jax.Array:
+    """Unnormalized Walsh–Hadamard transform along the last axis.
+
+    Sylvester (natural) order: ``out[..., i] = sum_j (-1)^popcount(i & j)
+    * x[..., j]`` — exactly the sign convention ``srht_omega`` materializes,
+    so apply-path and dense-oracle results agree to f32 rounding.  Length
+    must be a power of two; O(L log L) additions, no multiplies.
+    """
+    lead = x.shape[:-1]
+    L = x.shape[-1]
+    if L & (L - 1):
+        raise ValueError(f"fwht length must be a power of two, got {L}")
+    x = x.astype(jnp.float32).reshape(-1, L)
+    h = 1
+    while h < L:
+        x = x.reshape(-1, L // (2 * h), 2, h)
+        a = x[:, :, 0, :]
+        b = x[:, :, 1, :]
+        x = jnp.stack([a + b, a - b], axis=2).reshape(-1, L)
+        h *= 2
+    return x.reshape(*lead, L)
+
+
+# ---------------------------------------------------------------------------
+# SRHT
+# ---------------------------------------------------------------------------
+
+def _srht_streams(key: jax.Array):
+    kw = _kf.key_words(key)
+    return kw[0, 0], kw[0, 1]
+
+
+def srht_signs(key: jax.Array, rows: jax.Array) -> jax.Array:
+    """±1 diagonal entries D[row] — pure function of (key, global row)."""
+    k0, k1 = _srht_streams(key)
+    bits = _kf.counter_bits(k0, k1, rows.astype(jnp.int32),
+                            jnp.zeros((), jnp.int32), SRHT_SIGN_STREAM)
+    return jnp.where((bits >> 31).astype(jnp.bool_), -1.0, 1.0
+                     ).astype(jnp.float32)
+
+
+def srht_col_indices(key: jax.Array, cols: jax.Array, L: int) -> jax.Array:
+    """Hadamard column index idx(col) in [0, L) — pure function of
+    (key, global col).  With-replacement uniform subsample: L is a power
+    of two, so the uint32 modulo is exactly uniform."""
+    k0, k1 = _srht_streams(key)
+    bits = _kf.counter_bits(k0, k1, jnp.zeros((), jnp.int32),
+                            cols.astype(jnp.int32), SRHT_INDEX_STREAM)
+    return (bits % jnp.uint32(L)).astype(jnp.int32)
+
+
+def srht_omega(key: jax.Array, shape: tuple[int, int], *,
+               n_total: int | None = None, p_total: int | None = None,
+               row_offset=0, col_offset=0, dtype=jnp.float32) -> jax.Array:
+    """Dense (rows, cols) block of the SRHT Omega — the GEMM oracle the
+    O(n log n) apply path is tested against, and the block-regeneration
+    primitive for partial-width streamed tiles (``stream.update_cols``).
+
+    ``Omega[i, j] = D[i] · (-1)^popcount(i & idx(j)) / sqrt(p_total)``
+    with global indices ``i = row_offset + local_i`` etc.  ``n_total`` is
+    the data dimension the transform is sized for (L = next_pow2), and
+    ``p_total`` the TOTAL sketch width — both default to this block's
+    shape, which is the ordinary ``materialize_omega`` case.  Offsets may
+    be traced (the update_cols scan-carry path).
+    """
+    n, p = shape
+    L = next_pow2(n_total if n_total is not None else n)
+    p_tot = int(p_total) if p_total is not None else p
+    rows = (jnp.arange(n, dtype=jnp.int32)[:, None]
+            + jnp.asarray(row_offset, jnp.int32))
+    cols = (jnp.arange(p, dtype=jnp.int32)[None, :]
+            + jnp.asarray(col_offset, jnp.int32))
+    d = srht_signs(key, rows)                       # (n, 1)
+    idx = srht_col_indices(key, cols, L)            # (1, p)
+    h = 1 - 2 * (jax.lax.population_count(rows & idx) & 1)
+    vals = d * h.astype(jnp.float32) * jnp.float32(1.0 / math.sqrt(p_tot))
+    return vals.astype(dtype)
+
+
+def srht_sketch(key: jax.Array, a: jax.Array, p: int) -> jax.Array:
+    """Y = A · Omega_srht(key)[n, p] WITHOUT the GEMM: sign-flip the
+    columns, FWHT each row (O(n log n) adds), gather the p hashed Hadamard
+    columns, scale by 1/sqrt(p).
+
+    Row-local: row ``i`` of Y depends only on row ``i`` of A, so streamed
+    row tiles are bit-identical to the one-shot sketch (the property
+    ``stream.update`` relies on).  Matches
+    ``A @ srht_omega(key, (n, p))`` to f32 rounding (the butterfly and the
+    dot product sum in different orders — never bitwise).
+    """
+    a = a.astype(jnp.float32)
+    m, n = a.shape
+    L = next_pow2(n)
+    d = srht_signs(key, jnp.arange(n, dtype=jnp.int32))        # (n,)
+    x = a * d[None, :]
+    if L > n:
+        x = jnp.pad(x, ((0, 0), (0, L - n)))
+    x = fwht(x)
+    idx = srht_col_indices(key, jnp.arange(p, dtype=jnp.int32), L)
+    return jnp.take(x, idx, axis=1) * jnp.float32(1.0 / math.sqrt(p))
+
+
+def srht_apply_flops(m: int, n: int, p: int) -> int:
+    """Adds performed by the O(n log n) apply path (sign flips + FWHT
+    butterflies + gather) — the BENCH_shgemm.json structured-row metric,
+    compared against the 2·m·n·p GEMM FLOPs it replaces."""
+    L = next_pow2(n)
+    return m * n + m * L * int(math.log2(L)) + m * p
+
+
+# ---------------------------------------------------------------------------
+# Khatri–Rao (tensorized) Omega
+# ---------------------------------------------------------------------------
+
+# Shape instrumentation hook: when a list is installed via record_shapes(),
+# every intermediate produced by KhatriRaoOmega.sketch_slab appends its
+# shape — the "never materializes the unfolding's column dimension" test
+# probe.  Plain Python (shapes are static even under tracing).
+_SHAPE_LOG: Optional[list] = None
+
+
+class record_shapes:
+    """Context manager installing a shape log for KR sketch intermediates:
+
+        with structured.record_shapes() as shapes:
+            ...khatri_rao sketches...
+        assert all(math.prod(s[1:-1]) < unfolding_cols for s in shapes)
+    """
+
+    def __init__(self, log: list | None = None):
+        self.log = log if log is not None else []
+
+    def __enter__(self) -> list:
+        global _SHAPE_LOG
+        self._prev = _SHAPE_LOG
+        _SHAPE_LOG = self.log
+        return self.log
+
+    def __exit__(self, *exc):
+        global _SHAPE_LOG
+        _SHAPE_LOG = self._prev
+        return False
+
+
+def _probe(shape) -> None:
+    if _SHAPE_LOG is not None:
+        _SHAPE_LOG.append(tuple(int(s) for s in shape))
+
+
+_KR_SALT_A = 0x8EBC6AF1
+_KR_SALT_B = 0x5851F42D
+
+
+@dataclasses.dataclass(frozen=True)
+class KhatriRaoOmega:
+    """Mode-``mode`` Khatri–Rao test matrix of a ``dims`` tensor, width
+    ``p``: the column-wise Kronecker product of per-mode Gaussian factors
+    ``f_j (I_j, p)`` for ``j != mode``, each drawn from the counter
+    lattice (factor ``j``'s key is a hash-fold of the base key, so every
+    factor element is a pure function of ``(key, j, row, col)``).
+
+    Row ordering of the implied dense Omega matches ``hosvd.unfold``:
+    non-mode axes ascending, row-major — so
+    ``unfold(t, mode) @ kr.dense()`` is the oracle for ``sketch_slab(t)``.
+    """
+    key: jax.Array                 # typed PRNG key or raw (2,) uint32 words
+    dims: Tuple[int, ...]
+    mode: int
+    p: int
+
+    def __post_init__(self):
+        if not 0 <= self.mode < len(self.dims):
+            raise ValueError(f"mode {self.mode} out of range for dims "
+                             f"{self.dims}")
+        if len(self.dims) < 2:
+            raise ValueError("Khatri–Rao Omega needs a tensor (ndim >= 2); "
+                             "matrix sketches have nothing to factor")
+
+    @property
+    def others(self) -> tuple[int, ...]:
+        return tuple(j for j in range(len(self.dims)) if j != self.mode)
+
+    @property
+    def n_cols(self) -> int:
+        out = 1
+        for j in self.others:
+            out *= self.dims[j]
+        return out
+
+    def _factor_words(self, j: int) -> jax.Array:
+        kw = _kf.key_words(self.key)
+        fj = jnp.uint32(j)
+        k0 = _kf._fmix32(kw[0, 0] + fj * jnp.uint32(_KR_SALT_A))
+        k1 = _kf._fmix32(kw[0, 1] ^ (fj * jnp.uint32(_KR_SALT_B)))
+        return jnp.stack([k0, k1])
+
+    def factor(self, j: int, rows: int | None = None,
+               row_offset=0) -> jax.Array:
+        """Factor ``f_j`` rows [row_offset : row_offset+rows] from the
+        counter lattice (f32 — the factors are small; only the big mode
+        GEMMs they *replace* were mixed-precision)."""
+        if j == self.mode:
+            raise ValueError(f"mode {j} is the sketched mode — the "
+                             f"Khatri–Rao product runs over the others")
+        r = int(rows) if rows is not None else self.dims[j]
+        return _kf.reference_omega(self._factor_words(j), (r, self.p),
+                                   dist="gaussian", dtype=jnp.float32,
+                                   row_offset=row_offset)
+
+    def sketch_slab(self, slab: jax.Array, axis0_offset=0) -> jax.Array:
+        """Contribution of an axis-0 slab ``A[off:off+b, ...]`` to the
+        mode sketch ``W = A_(mode) · Omega_mode`` — contracted
+        factor-by-factor so nothing with the unfolding's column dimension
+        ``prod_{j != mode} I_j`` ever exists.
+
+        ``mode == 0``: returns the slab's ROWS of W, ``(b, p)`` (factor 0
+        is not part of Omega_0; ``axis0_offset`` is unused).  Otherwise:
+        returns a full-shape partial sum ``(I_mode, p)`` — factor 0's rows
+        are regenerated at ``axis0_offset``, so slab-order accumulation
+        equals the one-shot contraction up to f32 summation order.
+
+        Intermediates run largest-remaining-axis first (smallest peak
+        memory); every one is reported to the ``record_shapes`` probe.
+        """
+        t = jnp.asarray(slab, jnp.float32)
+        if t.ndim != len(self.dims):
+            raise ValueError(f"slab ndim {t.ndim} != tensor ndim "
+                             f"{len(self.dims)}")
+        for j in range(len(self.dims)):
+            if j not in (0, self.mode) and t.shape[j] != self.dims[j]:
+                raise ValueError(f"slab axis {j} has {t.shape[j]} != "
+                                 f"dims[{j}]={self.dims[j]} (slabs tile "
+                                 f"axis 0 only)")
+        # contract big axes first: the first contraction multiplies the
+        # remaining volume by p / I_j, so eliminating the largest I_j
+        # first minimizes every intermediate
+        order = sorted(self.others, key=lambda j: -t.shape[j])
+        perm = (self.mode,) + tuple(order)
+        cur = jnp.transpose(t, perm)
+        first = True
+        for j in order:
+            f = self.factor(j, rows=cur.shape[1],
+                            row_offset=(axis0_offset if j == 0 else 0))
+            if first:
+                cur = jnp.einsum("ma...,ap->m...p", cur, f)
+                first = False
+            else:
+                cur = jnp.einsum("ma...p,ap->m...p", cur, f)
+            _probe(cur.shape)
+        return cur  # (slab mode extent, p)
+
+    def dense(self, dtype=jnp.float32) -> jax.Array:
+        """Materialized ``(prod_{j != mode} I_j, p)`` Omega — the oracle
+        GEMM operand (tests/benchmarks only; the apply path never builds
+        it).  Rows ordered to match ``hosvd.unfold``: ascending non-mode
+        axes, row-major (earlier axes vary slowest)."""
+        out = jnp.ones((1, self.p), jnp.float32)
+        for j in self.others:
+            f = self.factor(j)
+            out = (out[:, None, :] * f[None, :, :]).reshape(-1, self.p)
+        return out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Per-family estimator validity (Pearce–Martinsson survey, arXiv 2512.05286)
+# ---------------------------------------------------------------------------
+
+_GAUSS_ONLY = ("the Halko Eq. (4) expected-error bound is a theorem about "
+               "GAUSSIAN test matrices (Halko et al. 2011, Thm. 10.5 takes "
+               "the expectation over a Gaussian Omega); {family} matrices "
+               "obey different, larger-constant tail bounds (see the "
+               "Pearce–Martinsson survey), so the Eq.-4 number would be "
+               "reported as if it certified an error it does not — the "
+               "exact posterior estimate ||A||² − Σσ²(QᵀA) remains valid "
+               "for every family and is what drives the widening loop")
+
+#: family -> which error estimators are valid.  ``posterior_exact`` is the
+#: adaptive driver's stopping rule (exact for any orthonormal Q, family
+#: irrelevant); ``halko_eq4`` the Gaussian-specific Eq. (4) prior bound.
+ESTIMATOR_VALIDITY = {
+    "gaussian": {"posterior_exact": True, "halko_eq4": True,
+                 "reason": None},
+    "achlioptas": {"posterior_exact": True, "halko_eq4": False,
+                   "reason": _GAUSS_ONLY.format(family="sparse-sign")},
+    "very_sparse": {"posterior_exact": True, "halko_eq4": False,
+                    "reason": _GAUSS_ONLY.format(family="very-sparse sign")},
+    "srht": {"posterior_exact": True, "halko_eq4": False,
+             "reason": _GAUSS_ONLY.format(family="SRHT")},
+    "khatri_rao": {"posterior_exact": True, "halko_eq4": False,
+                   "reason": _GAUSS_ONLY.format(family="Khatri–Rao")},
+}
+
+
+def halko_bound_valid(dist: str) -> bool:
+    """True iff the Eq.-4 diagnostic may be reported for ``dist``."""
+    try:
+        return ESTIMATOR_VALIDITY[dist]["halko_eq4"]
+    except KeyError:
+        raise ValueError(f"unknown sketch distribution {dist!r}") from None
+
+
+def bound_invalid_reason(dist: str) -> str | None:
+    """Documented reason the Eq.-4 bound is withheld (None when valid)."""
+    halko_bound_valid(dist)  # raise on unknown family
+    return ESTIMATOR_VALIDITY[dist]["reason"]

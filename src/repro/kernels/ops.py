@@ -128,9 +128,16 @@ def shgemm_fused(a: jax.Array, key: jax.Array, n: int, *,
     call reproduces the one-shot columns bit for bit at any offset — the
     property adaptive sketch widening (stream.SketchState.widen) relies
     on.  Traced offsets (scan carries) are accepted unchecked.  NOTE: for
-    ``dist="very_sparse"`` with a nonzero row_offset, pass the global
-    ``s`` explicitly (the default is derived from this call's local k).
+    ``dist="very_sparse"`` with a nonzero row_offset (or any partial-width
+    row tile), pass the GLOBAL data dimension's ``s`` explicitly — the
+    default is derived from this call's local k, i.e. a different
+    distribution than the one-shot sketch.
     """
+    if dist in ("srht", "khatri_rao"):
+        raise ValueError(
+            f"dist={dist!r} is a structured family with no GEMM to fuse — "
+            f"use core.projection.sketch (SRHT O(n log n) apply path) or "
+            f"core.structured.KhatriRaoOmega instead of the fused kernel")
     a = a.astype(jnp.float32)
     m, k = a.shape
     store_dtype = jnp.dtype(omega_dtype).type

@@ -37,7 +37,12 @@ which these moment- and rSVD-level tests cannot distinguish from true i.i.d.).
 Distributions: ``gaussian`` (Box–Muller from two hashed 24-bit uniforms, so
 mean 0 / variance 1 exactly in distribution), ``achlioptas`` (paper Eq. 5
 thresholding, entries {-1, 0, +1} without the sqrt(s) scale — §3.4), and
-``very_sparse`` (Li et al., s = sqrt(k)).
+``very_sparse`` (Li et al., s = sqrt(k), k the DATA dimension — Omega's
+global row count, not a tile's local extent; see ``_resolve_s``).
+
+Structured families (SRHT, Khatri–Rao) live in ``core/structured.py`` on the
+same counter lattice; their apply paths bypass the GEMM entirely, so this
+kernel rejects them (``ops.shgemm_fused`` raises with a pointer).
 """
 
 from __future__ import annotations
@@ -123,9 +128,21 @@ def key_words(key: jax.Array) -> jax.Array:
 
 
 def _resolve_s(dist: str, s: float | None, k: int) -> float:
+    """Sparsity parameter for the sign dists.
+
+    An EXPLICIT ``s`` always wins — callers sketching a partial row block
+    (streamed column tiles, Psi streams) must pass the s of the GLOBAL data
+    dimension or the tile would silently draw from a different distribution
+    than the one-shot sketch.  Defaults: Achlioptas s=3; very_sparse
+    s = sqrt(k) with k the data dimension = Omega's (global) row count
+    (Li et al. 2006) — computed in f64 ``math.sqrt`` everywhere so the
+    threshold is bitwise-shared across the legacy and fused paths.
+    """
+    if s is not None:
+        return float(s)
     if dist == "very_sparse":
         return float(math.sqrt(k))
-    return float(s if s is not None else 3.0)
+    return 3.0
 
 
 def reference_omega(key: jax.Array, shape: tuple[int, int], *,

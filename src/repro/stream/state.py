@@ -36,7 +36,6 @@ thread through jit / lax.scan / vmap unchanged.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional
 
 import jax
@@ -106,6 +105,13 @@ class SketchState:
         extra = int(extra_cols)
         if extra < 1:
             raise ValueError(f"extra_cols must be >= 1, got {extra_cols}")
+        if self.dist == "srht":
+            raise ValueError(
+                "cannot widen an SRHT sketch: every Omega entry carries a "
+                "1/sqrt(p) scale tied to the TOTAL sketch width, so a "
+                "width-p SRHT shares no columns with a width-(p+e) one — "
+                "re-init at the new width and re-sketch (core.rsvd's "
+                "adaptive driver does exactly that for SRHT)")
         if self.method != "shgemm_fused":
             raise ValueError(
                 f"widen needs method='shgemm_fused' (got {self.method!r}): "
@@ -159,6 +165,19 @@ def init(key: jax.Array, n_cols: int, p: int, *, max_rows: int,
     """
     if p > n_cols:
         raise ValueError(f"sketch width p={p} exceeds n_cols={n_cols}")
+    if dist == "srht" and left:
+        raise ValueError(
+            "dist='srht' cannot left-sketch: the Psi stream needs "
+            "column-block regeneration of an UNSTRUCTURED lattice "
+            "(kernels/shgemm_fused); use a sparse/gaussian dist for "
+            "left-sketching states, or a right-only SRHT state")
+    if dist == "khatri_rao":
+        raise ValueError(
+            "dist='khatri_rao' is a tensor-mode family — it has no flat "
+            "(n_cols, p) Omega for a matrix SketchState; use "
+            "stream.tucker.tucker_init(dist='khatri_rao') (mode sketches "
+            "contract factor-by-factor) or core.structured.KhatriRaoOmega "
+            "directly")
     l = int(l) if l is not None else 2 * p + 1
     key_omega = _raw_key(key)
     key_psi = _raw_key(jax.random.fold_in(key, 0x5117))
@@ -186,15 +205,23 @@ def _typed_key(raw: jax.Array) -> jax.Array:
 
 def _psi_s(state: SketchState) -> float | None:
     """Psi's sparse-dist parameter must come from the GLOBAL row count, not
-    any one tile's height (one-shot/streamed agreement)."""
+    any one tile's height (one-shot/streamed agreement).  Resolved through
+    the kernel's ``_resolve_s`` (f64 sqrt) so the explicit value passed down
+    is bitwise the default a one-shot max_rows-row sketch would compute."""
     if state.dist == "very_sparse":
-        return float(math.sqrt(state.max_rows))
+        return _kf._resolve_s("very_sparse", None, state.max_rows)
     return None
 
 
 def _sketch_rows(state: SketchState, a_block: jax.Array) -> jax.Array:
     """a_block (b, n_cols) -> its rows of Y = A·Omega, bit-identical to the
     one-shot sketch's rows (Omega depends only on (key, n_cols, p))."""
+    if state.dist == "srht":
+        # Row-local structured apply (sign-flip + FWHT + gather): row i of Y
+        # depends only on row i of A, so streamed tiles are bitwise the
+        # one-shot sketch's rows whatever the GEMM method would have been.
+        from repro.core import structured as _sx
+        return _sx.srht_sketch(_typed_key(state.key_omega), a_block, state.p)
     if state.method == "shgemm_fused":
         # explicit heuristic blocks: bn/bk depend only on (p, n_cols), so
         # every tile shares one K-chunking whatever its height.  The Omega
@@ -321,9 +348,25 @@ def update_cols(state: SketchState, a_block: jax.Array, row_offset,
     r0 = jnp.asarray(row_offset, jnp.int32)
     c0 = jnp.asarray(col_offset, jnp.int32)
 
-    if state.method == "shgemm_fused":
+    if state.dist == "srht":
+        # A partial-width tile covers only some Hadamard input coordinates,
+        # so there is no FWHT shortcut: regenerate the (bc, p) Omega row
+        # block from the lattice (srht_omega supports traced row offsets)
+        # and apply it densely — the block is small; the O(n log n) win is
+        # the full-width path (_sketch_rows).
+        from repro.core import structured as _sx
+        om_blk = _sx.srht_omega(
+            _typed_key(state.key_omega), (bc, state.p),
+            n_total=state.n_cols, row_offset=c0, dtype=jnp.float32)
+        y_inc = jnp.dot(a_block, om_blk,
+                        precision=jax.lax.Precision.HIGHEST,
+                        preferred_element_type=jnp.float32)
+    elif state.method == "shgemm_fused":
         blocks = _tune.heuristic_blocks(br, state.p, bc)
-        s = (float(math.sqrt(state.n_cols))
+        # explicit GLOBAL-dimension s: without it the kernel would derive
+        # sqrt(bc) from this tile's local width — a different distribution
+        # than the one-shot sketch (the _resolve_s bugfix this relies on)
+        s = (_kf._resolve_s("very_sparse", None, state.n_cols)
              if state.dist == "very_sparse" else None)
         y_inc = ops.shgemm_fused(a_block, state.key_omega, state.p,
                                  dist=state.dist, omega_dtype=state.odtype,

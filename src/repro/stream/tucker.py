@@ -77,6 +77,12 @@ def tucker_init(key: jax.Array, dims, ranks, *,
     ranks = tuple(int(r) for r in ranks)
     if len(dims) != len(ranks):
         raise ValueError(f"dims {dims} / ranks {ranks} length mismatch")
+    if dist == "srht":
+        raise ValueError(
+            "dist='srht' does not stream through axis-0 slabs: a slab is a "
+            "PARTIAL-width column range of every mode-i>=1 unfolding, and "
+            "partial tiles have no FWHT shortcut — use 'khatri_rao' for "
+            "structured mode sketches, or an unstructured dist")
     core_dims = tuple(min(2 * r + core_oversample, d)
                       for r, d in zip(ranks, dims))
     modes = []
@@ -86,14 +92,65 @@ def tucker_init(key: jax.Array, dims, ranks, *,
         for j, dj in enumerate(dims):
             if j != i:
                 n_cols *= dj
-        modes.append(_st.init(jax.random.fold_in(key, i), n_cols, r,
-                              max_rows=d, left=False, method=method,
-                              dist=dist, omega_dtype=omega_dtype))
+        if dist == "khatri_rao":
+            # The mode state is an accumulator only: Y_i is filled by the
+            # factor-by-factor contraction in tucker_update (no flat
+            # (n_cols, r) Omega ever exists), so bypass _st.init's
+            # matrix-dist validation and build the container directly.
+            # key_omega seeds the KhatriRaoOmega factors for this mode.
+            modes.append(SketchState(
+                y=jnp.zeros((d, r), jnp.float32), w=None,
+                key_omega=_st._raw_key(jax.random.fold_in(key, i)),
+                key_psi=None, rows_seen=jnp.zeros((), jnp.int32),
+                n_cols=n_cols, p=r, l=0, method=str(method),
+                dist="khatri_rao",
+                omega_dtype=jnp.dtype(omega_dtype).name))
+        else:
+            modes.append(_st.init(jax.random.fold_in(key, i), n_cols, r,
+                                  max_rows=d, left=False, method=method,
+                                  dist=dist, omega_dtype=omega_dtype))
         key_psis.append(_st._raw_key(jax.random.fold_in(key, 0x7E0 + i)))
     return TuckerSketch(
         modes=tuple(modes), z=jnp.zeros(core_dims, jnp.float32),
         key_psis=tuple(key_psis), rows_seen=jnp.zeros((), jnp.int32),
         dims=dims, ranks=ranks, core_dims=core_dims)
+
+
+def _kr_omega(ts: TuckerSketch, i: int):
+    """Mode-i KhatriRaoOmega rebuilt from the state's static config + key
+    (nothing extra rides in the pytree, so resilience payloads and
+    checkpoints are unchanged)."""
+    from repro.core import structured as _sx
+    return _sx.KhatriRaoOmega(key=ts.modes[i].key_omega, dims=ts.dims,
+                              mode=i, p=ts.ranks[i])
+
+
+def _kr_mode_updates(ts: TuckerSketch, slab: jax.Array, off, b: int):
+    """Khatri–Rao mode sketches of one axis-0 slab, contracted
+    factor-by-factor (core.structured.KhatriRaoOmega) — no array with any
+    unfolding's column dimension prod_{j!=i} I_j is ever materialized,
+    which for mode 0 is the big win (that unfolding's width is the whole
+    trailing volume).
+
+      mode 0 — sketch_slab returns the slab's ROWS of Y_0 (write, like
+               _st.update: bit-identical rows independent of slab order);
+      mode i — factor 0's rows are regenerated at the slab offset and the
+               (I_i, r_i) partial sum accumulates (add semantics, like
+               _st.update_cols).
+    """
+    new_modes = []
+    for i, st in enumerate(ts.modes):
+        kro = _kr_omega(ts, i)
+        inc = kro.sketch_slab(slab, axis0_offset=off)
+        if i == 0:
+            y = jax.lax.dynamic_update_slice(st.y, inc,
+                                             (jnp.asarray(off, jnp.int32),
+                                              jnp.int32(0)))
+        else:
+            y = st.y + inc
+        new_modes.append(dataclasses.replace(
+            st, y=y, rows_seen=jnp.maximum(st.rows_seen, off + b)))
+    return new_modes
 
 
 def tucker_update(ts: TuckerSketch, slab: jax.Array,
@@ -109,16 +166,19 @@ def tucker_update(ts: TuckerSketch, slab: jax.Array,
     b = slab.shape[0]
     off = jnp.asarray(row_offset, jnp.int32)
 
-    new_modes = [_st.update(ts.modes[0], unfold(slab, 0), off)]
-    for i in range(1, len(ts.dims)):
-        stride = 1
-        for j, dj in enumerate(ts.dims):
-            if j not in (0, i):
-                stride *= dj
-        # unfold() orders the non-mode axes ascending, axis 0 first, so an
-        # axis-0 slab is a contiguous column range of every unfolding.
-        new_modes.append(_st.update_cols(ts.modes[i], unfold(slab, i),
-                                         jnp.int32(0), off * stride))
+    if ts.modes[0].dist == "khatri_rao":
+        new_modes = _kr_mode_updates(ts, slab, off, b)
+    else:
+        new_modes = [_st.update(ts.modes[0], unfold(slab, 0), off)]
+        for i in range(1, len(ts.dims)):
+            stride = 1
+            for j, dj in enumerate(ts.dims):
+                if j not in (0, i):
+                    stride *= dj
+            # unfold() orders the non-mode axes ascending, axis 0 first, so
+            # an axis-0 slab is a contiguous column range of every unfolding.
+            new_modes.append(_st.update_cols(ts.modes[i], unfold(slab, i),
+                                             jnp.int32(0), off * stride))
 
     # Core sketch: contract the slab with Psi_0's column block at the slab
     # offset, then full Psi_i for the remaining modes.

@@ -1,0 +1,356 @@
+"""Structured Omega families (core/structured.py, DESIGN.md §17): SRHT
+determinism + O(n log n) apply, Khatri–Rao factor-by-factor mode sketches,
+the per-family estimator-validity gate, and the sparse-dist s-parameter
+bitwise pins."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hosvd, projection as proj, rsvd, structured
+from repro.kernels import ops, shgemm_fused as kf
+from repro.stream import state as stream_state
+from repro.stream.tucker import tucker_init
+
+jax.config.update("jax_platform_name", "cpu")
+
+KEY = jax.random.PRNGKey(1234)
+
+
+def _rel(y, ref):
+    y = np.asarray(y, np.float64)
+    ref = np.asarray(ref, np.float64)
+    return float(np.linalg.norm(y - ref) / max(np.linalg.norm(ref), 1e-30))
+
+
+# ---------------------------------------------------------------------------
+# FWHT / SRHT core
+# ---------------------------------------------------------------------------
+
+def test_fwht_matches_dense_hadamard():
+    """Sylvester natural order: out[i] = sum_j (-1)^popcount(i&j) x[j] —
+    the same sign convention srht_omega materializes."""
+    L = 16
+    x = np.asarray(jax.random.normal(KEY, (3, L), jnp.float32), np.float64)
+    h = np.array([[(-1.0) ** bin(i & j).count("1") for j in range(L)]
+                  for i in range(L)])
+    np.testing.assert_allclose(np.asarray(structured.fwht(jnp.asarray(x))),
+                               x @ h.T, rtol=1e-6, atol=1e-5)
+
+
+def test_fwht_rejects_non_pow2():
+    with pytest.raises(ValueError, match="power of two"):
+        structured.fwht(jnp.zeros((2, 12)))
+
+
+@pytest.mark.parametrize("n", [64, 100])   # exact pow2 and padded
+def test_srht_sketch_matches_dense_oracle(n):
+    """Acceptance criterion: the FWHT apply path agrees with the GEMM
+    against the materialized lattice Omega to <= 1e-5 (f32)."""
+    m, p = 24, 16
+    a = jax.random.normal(jax.random.fold_in(KEY, n), (m, n), jnp.float32)
+    y = proj.sketch(KEY, a, p, dist="srht")
+    oracle = (np.asarray(a, np.float64)
+              @ np.asarray(structured.srht_omega(KEY, (n, p)), np.float64))
+    assert _rel(y, oracle) <= 1e-5
+
+
+def test_srht_sketch_ignores_gemm_method():
+    """dist='srht' takes the structured fast path whatever ``method`` says
+    — there is no GEMM for the method to run, so all three are bitwise."""
+    m, n, p = 16, 50, 8
+    a = jax.random.normal(jax.random.fold_in(KEY, 3), (m, n), jnp.float32)
+    ys = [np.asarray(proj.sketch(KEY, a, p, dist="srht", method=meth))
+          for meth in ("f32", "shgemm", "shgemm_fused")]
+    np.testing.assert_array_equal(ys[0], ys[1])
+    np.testing.assert_array_equal(ys[0], ys[2])
+
+
+def test_srht_apply_has_no_gemm():
+    """Acceptance criterion: no (n x p) GEMM anywhere in the apply path —
+    the traced program contains no dot_general at all (sign-flip + FWHT
+    butterflies + gather only)."""
+    m, n, p = 8, 48, 6
+    a = jnp.zeros((m, n), jnp.float32)
+    jaxpr = jax.make_jaxpr(
+        lambda a_: structured.srht_sketch(KEY, a_, p))(a)
+    assert "dot_general" not in str(jaxpr)
+    assert structured.srht_apply_flops(m, n, p) < 2 * m * n * p
+
+
+def test_srht_omega_block_regeneration_bitwise():
+    """Any (row, col) block regenerated at an offset equals the same block
+    of the full matrix — the (key, global row, col) determinism contract,
+    and what stream.update_cols relies on."""
+    n, p = 40, 12
+    full = np.asarray(structured.srht_omega(KEY, (n, p)))
+    blk = np.asarray(structured.srht_omega(
+        KEY, (16, 5), n_total=n, p_total=p, row_offset=8, col_offset=3))
+    np.testing.assert_array_equal(full[8:24, 3:8], blk)
+
+
+def test_srht_streamed_row_tiles_bitwise():
+    """Row-local apply => streamed row tiles are bit-identical to the
+    one-shot sketch (write semantics, same FWHT per row)."""
+    m, n, p = 20, 33, 8
+    a = jax.random.normal(jax.random.fold_in(KEY, 5), (m, n), jnp.float32)
+    one_shot = np.asarray(proj.sketch(KEY, a, p, dist="srht"))
+    st = stream_state.init(KEY, n, p, max_rows=m, method="shgemm",
+                           dist="srht")
+    for off in (0, 7, 13):
+        end = min(off + 7, m) if off else 7
+        st = stream_state.update(st, a[off:end], off)
+    np.testing.assert_array_equal(one_shot, np.asarray(st.y))
+
+
+def test_srht_update_cols_matches_oneshot():
+    """Partial-width column tiles (dense Omega row-block regeneration)
+    accumulate to the one-shot FWHT sketch up to f32 summation order."""
+    m, n, p = 12, 30, 8
+    a = jax.random.normal(jax.random.fold_in(KEY, 6), (m, n), jnp.float32)
+    one_shot = np.asarray(proj.sketch(KEY, a, p, dist="srht"))
+    st = stream_state.init(KEY, n, p, max_rows=m, method="shgemm",
+                           dist="srht")
+    for c0, c1 in ((0, 11), (11, 30)):
+        st = stream_state.update_cols(st, a[:, c0:c1], 0, c0)
+    np.testing.assert_allclose(np.asarray(st.y), one_shot,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_srht_widen_raises():
+    """The 1/sqrt(p) scale ties every entry to the TOTAL width — widening
+    is meaningless, the state must refuse loudly."""
+    st = stream_state.init(KEY, 64, 8, max_rows=16, method="shgemm_fused",
+                           dist="srht")
+    with pytest.raises(ValueError, match="cannot widen an SRHT"):
+        st.widen(4)
+
+
+def test_srht_structured_rejections():
+    with pytest.raises(ValueError, match="cannot left-sketch"):
+        stream_state.init(KEY, 64, 8, max_rows=16, left=True, dist="srht")
+    with pytest.raises(ValueError, match="khatri_rao"):
+        stream_state.init(KEY, 64, 8, max_rows=16, dist="khatri_rao")
+    with pytest.raises(ValueError, match="structured family"):
+        ops.shgemm_fused(jnp.zeros((8, 16), jnp.float32), KEY, 4,
+                         dist="srht")
+    with pytest.raises(ValueError, match="srht"):
+        tucker_init(KEY, (16, 8, 6), (4, 3, 3), dist="srht")
+
+
+# ---------------------------------------------------------------------------
+# All-family x all-method oracle matrix
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dist", ["gaussian", "achlioptas", "very_sparse",
+                                  "srht"])
+@pytest.mark.parametrize("method", ["f32", "shgemm", "shgemm_fused"])
+def test_sketch_matches_dense_omega_oracle(dist, method):
+    """Every (dist, method) cell of projection.sketch agrees with the f32
+    GEMM against ITS OWN dense Omega (the legacy jax.random draw for
+    non-fused methods, the counter lattice for the fused kernel and SRHT)."""
+    m, n, p = 32, 96, 12
+    a = jax.random.normal(jax.random.fold_in(KEY, 7), (m, n), jnp.float32)
+    y = np.asarray(proj.sketch(KEY, a, p, dist=dist, method=method))
+    if dist == "srht":
+        omega = structured.srht_omega(KEY, (n, p))
+    elif method == "shgemm_fused":
+        omega = proj.fused_omega(KEY, (n, p), dist=dist)
+    else:
+        omega = proj.materialize_omega(KEY, (n, p), dist=dist)
+    oracle = (np.asarray(a, np.float64)
+              @ np.asarray(omega.astype(jnp.float32), np.float64))
+    assert _rel(y, oracle) <= 1e-5, (dist, method)
+
+
+@pytest.mark.parametrize("mode", [0, 1, 2])
+def test_khatri_rao_matches_dense_oracle(mode):
+    """sketch_slab == unfold(t, mode) @ dense() — the dense Khatri–Rao
+    Omega is the oracle the factor-by-factor contraction must match, with
+    rows ordered exactly as hosvd.unfold orders columns."""
+    dims, p = (7, 6, 5), 4
+    t = jax.random.normal(jax.random.fold_in(KEY, 8), dims, jnp.float32)
+    kro = structured.KhatriRaoOmega(key=KEY, dims=dims, mode=mode, p=p)
+    oracle = (np.asarray(hosvd.unfold(t, mode), np.float64)
+              @ np.asarray(kro.dense(), np.float64))
+    assert _rel(kro.sketch_slab(t), oracle) <= 1e-5
+
+
+def test_khatri_rao_slab_accumulation():
+    """Axis-0 slabs: mode-0 contributions are disjoint row writes; mode-i
+    contributions sum to the one-shot contraction (factor 0's rows are
+    regenerated at the slab offset)."""
+    dims, p = (8, 5, 4), 3
+    t = jax.random.normal(jax.random.fold_in(KEY, 9), dims, jnp.float32)
+    for mode in (0, 1, 2):
+        kro = structured.KhatriRaoOmega(key=KEY, dims=dims, mode=mode, p=p)
+        full = np.asarray(kro.sketch_slab(t), np.float64)
+        parts = [np.asarray(kro.sketch_slab(t[o:o + 4], axis0_offset=o),
+                            np.float64) for o in (0, 4)]
+        got = np.concatenate(parts, 0) if mode == 0 else parts[0] + parts[1]
+        np.testing.assert_allclose(got, full, rtol=1e-5, atol=1e-5)
+
+
+def test_khatri_rao_validation():
+    kro = structured.KhatriRaoOmega(key=KEY, dims=(6, 5, 4), mode=1, p=3)
+    with pytest.raises(ValueError, match="sketched mode"):
+        kro.factor(1)
+    with pytest.raises(ValueError, match="out of range"):
+        structured.KhatriRaoOmega(key=KEY, dims=(6, 5), mode=2, p=3)
+    with pytest.raises(ValueError, match="slabs tile axis 0"):
+        kro.sketch_slab(jnp.zeros((6, 5, 3), jnp.float32))
+
+
+def test_khatri_rao_streamed_sthosvd_never_widens_to_unfolding():
+    """Acceptance criterion: rp_sthosvd_streamed(dist='khatri_rao') never
+    materializes an array with any unfolding's column dimension — asserted
+    via the record_shapes probe — and recovers the tensor at its true
+    multilinear rank."""
+    dims, gen_ranks, ranks, tile = (12, 6, 5, 4), (5, 5, 5, 5), (3, 3, 3, 3), 4
+    a = hosvd.make_test_tensor(jax.random.fold_in(KEY, 0), dims, gen_ranks)
+    slabs = lambda: (a[i:i + tile] for i in range(0, dims[0], tile))
+    with structured.record_shapes() as shapes:
+        res = hosvd.rp_sthosvd_streamed(KEY, slabs, dims=dims, ranks=ranks,
+                                        dist="khatri_rao")
+    assert shapes, "shape probe recorded nothing"
+    slab_dims = (tile,) + dims[1:]
+    min_unfold = min(
+        int(np.prod([d for j, d in enumerate(slab_dims if i == 0 else dims)
+                     if j != i]))
+        for i in range(len(dims)))
+    max_inter = max(int(np.prod(s[1:])) for s in shapes)
+    assert max_inter < min_unfold, (max_inter, min_unfold)
+    assert float(hosvd.reconstruction_error(a, res)) <= 1e-4
+
+
+def test_khatri_rao_oneshot_hosvd():
+    """rp_sthosvd(dist='khatri_rao') routes the mode GEMMs through the
+    factored contraction and still recovers an exact-rank tensor."""
+    dims, gen_ranks, ranks = (10, 8, 6), (5, 5, 5), (3, 3, 3)
+    a = hosvd.make_test_tensor(jax.random.fold_in(KEY, 1), dims, gen_ranks)
+    res = hosvd.rp_sthosvd(KEY, a, ranks, dist="khatri_rao")
+    assert float(hosvd.reconstruction_error(a, res)) <= 1e-4
+
+
+# ---------------------------------------------------------------------------
+# Estimator-validity gate (adaptive driver)
+# ---------------------------------------------------------------------------
+
+def test_estimator_validity_table():
+    assert structured.halko_bound_valid("gaussian")
+    for d in ("achlioptas", "very_sparse", "srht", "khatri_rao"):
+        assert not structured.halko_bound_valid(d)
+        assert "Gaussian" in structured.bound_invalid_reason(d)
+    assert structured.bound_invalid_reason("gaussian") is None
+    with pytest.raises(ValueError, match="unknown sketch distribution"):
+        structured.halko_bound_valid("cauchy")
+
+
+@pytest.mark.parametrize("dist", ["gaussian", "very_sparse", "srht"])
+def test_adaptive_halko_gate(dist):
+    """Adaptive rsvd_streamed reports the Halko Eq. (4) diagnostic only for
+    Gaussian Omega; other families get None at EVERY width plus the
+    documented reason (the exact posterior estimate still drives the loop,
+    so convergence is family-independent)."""
+    m, n, rank = 48, 40, 4
+    a = rsvd.matrix_with_singular_values(
+        jax.random.fold_in(KEY, 2), n, rsvd.singular_values_exp(n, rank, 1e-4))
+    a = jnp.vstack([a, a[: m - n]])
+    res, info = rsvd.rsvd_streamed(
+        KEY, a, rank, oversample=8, tol=1e-2, max_oversample=24,
+        return_info=True, dist=dist)
+    assert info.converged
+    assert len(info.bound_history) == len(info.est_history) >= 1
+    if dist == "gaussian":
+        assert info.bound_reason is None
+        assert all(b is not None for b in info.bound_history)
+    else:
+        assert "Gaussian" in info.bound_reason
+        assert all(b is None for b in info.bound_history)
+    assert float(rsvd.reconstruction_error(a, res)) <= 5e-2
+
+
+# ---------------------------------------------------------------------------
+# Sparse-dist s-parameter pins (the bugfix satellites)
+# ---------------------------------------------------------------------------
+
+def test_resolve_s_explicit_wins_and_default_is_global_sqrt():
+    """The bug: an explicit s used to be DISCARDED for very_sparse, so
+    partial-width tiles silently re-derived sqrt(local extent)."""
+    assert kf._resolve_s("very_sparse", 7.0, 300) == 7.0
+    assert kf._resolve_s("very_sparse", None, 300) == math.sqrt(300)
+    assert kf._resolve_s("achlioptas", None, 300) == 3.0
+    st = stream_state.init(KEY, 64, 4, max_rows=300, dist="very_sparse")
+    assert stream_state._psi_s(st) == math.sqrt(300)
+
+
+def test_very_sparse_threshold_bitwise_across_paths():
+    """projection.very_sparse resolves its default s through the kernel's
+    f64 _resolve_s — the two paths share one bitwise-identical threshold
+    (n = 300 is not a perfect square, so f32 sqrt would differ)."""
+    n, p = 300, 8
+    legacy = np.asarray(proj.very_sparse(KEY, (n, p)))
+    pinned = np.asarray(proj.achlioptas_sparse(KEY, (n, p),
+                                               s=math.sqrt(300)))
+    np.testing.assert_array_equal(legacy, pinned)
+    fused_def = np.asarray(kf.reference_omega(KEY, (n, p),
+                                              dist="very_sparse"))
+    fused_exp = np.asarray(kf.reference_omega(KEY, (n, p),
+                                              dist="very_sparse",
+                                              s=math.sqrt(300)))
+    np.testing.assert_array_equal(fused_def, fused_exp)
+
+
+def test_very_sparse_tile_regeneration_bitwise():
+    """A partial row block regenerated with the explicit GLOBAL s is
+    bitwise the corresponding block of the one-shot Omega — the property
+    stream.update_cols' fix depends on (before the fix the tile derived
+    sqrt(local rows): a different matrix)."""
+    n, p = 300, 8
+    s = kf._resolve_s("very_sparse", None, n)
+    full = np.asarray(kf.reference_omega(KEY, (n, p), dist="very_sparse"))
+    blocks = [np.asarray(kf.reference_omega(KEY, (100, p),
+                                            dist="very_sparse", s=s,
+                                            row_offset=off))
+              for off in (0, 100, 200)]
+    np.testing.assert_array_equal(np.concatenate(blocks, 0), full)
+    # and WITHOUT the global s the local default is a different matrix
+    local = np.asarray(kf.reference_omega(KEY, (100, p),
+                                          dist="very_sparse"))
+    assert not np.array_equal(local, full[:100])
+
+
+def test_very_sparse_update_cols_matches_oneshot():
+    """Column-tiled streamed sketch == one-shot full-width sketch (the
+    end-to-end symptom of the s bug: these diverged for very_sparse)."""
+    m, n, p = 16, 300, 8
+    a = jax.random.normal(jax.random.fold_in(KEY, 11), (m, n), jnp.float32)
+    one_shot = stream_state.update(
+        stream_state.init(KEY, n, p, max_rows=m, dist="very_sparse"), a, 0)
+    tiled = stream_state.init(KEY, n, p, max_rows=m, dist="very_sparse")
+    for c0, c1 in ((0, 100), (100, 201), (201, 300)):
+        tiled = stream_state.update_cols(tiled, a[:, c0:c1], 0, c0)
+    np.testing.assert_allclose(np.asarray(tiled.y), np.asarray(one_shot.y),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_s_plumbed_through_materialize_and_sketch():
+    """The legacy jax.random front door accepts s= (it used to silently
+    ignore sparsity overrides the fused kernel honored)."""
+    n, p = 120, 8
+    om = np.asarray(proj.materialize_omega(KEY, (n, p), dist="achlioptas",
+                                           s=7.0))
+    pinned = np.asarray(proj.achlioptas_sparse(KEY, (n, p), s=7.0))
+    np.testing.assert_array_equal(om, pinned)
+    assert not np.array_equal(
+        om, np.asarray(proj.materialize_omega(KEY, (n, p),
+                                              dist="achlioptas")))
+    a = jax.random.normal(jax.random.fold_in(KEY, 12), (16, n), jnp.float32)
+    y = proj.sketch(KEY, a, p, method="f32", dist="very_sparse", s=7.0)
+    oracle = (np.asarray(a, np.float64)
+              @ np.asarray(proj.very_sparse(KEY, (n, p), s=7.0)
+                           .astype(jnp.float32), np.float64))
+    assert _rel(y, oracle) <= 1e-5
