@@ -55,8 +55,7 @@ def fig3_projection_accuracy(n: int = 1024, r: int = 20) -> list:
         a64 = np.asarray(a, np.float64)
         errs = {}
         for mant in (2, 3, 5, 7, 10, 23):
-            np.random.seed(7)
-            g = np.random.standard_normal((n, p_hat))
+            g = np.random.default_rng(7).standard_normal((n, p_hat))
             g_q = G.round_to_mantissa(g, mant)
             t0 = time.perf_counter()
             # f64 projection to isolate the OMEGA quantization effect (paper

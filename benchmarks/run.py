@@ -29,10 +29,10 @@ def main() -> None:
     for name, fn in suites:
         if only and only != name:
             continue
-        t0 = time.time()
+        t0 = time.perf_counter()
         try:
             print_rows(fn())
-            print(f"# suite {name} done in {time.time()-t0:.1f}s",
+            print(f"# suite {name} done in {time.perf_counter()-t0:.1f}s",
                   file=sys.stderr)
         except Exception as e:  # keep the harness honest but resilient
             print(f"{name}.SUITE_FAILED,0,{e!r}")

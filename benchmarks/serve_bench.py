@@ -36,6 +36,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import row
+from repro._atomic_io import atomic_write_json
 from repro.configs.base import smoke_config
 from repro.models import cache as cache_mod
 from repro.models import registry as R
@@ -262,8 +263,7 @@ def decode_kernel_rows(knobs: dict, records=None, *, max_new: int = 24,
 
 
 def _write_bench(records) -> None:
-    with open(BENCH_JSON, "w") as f:
-        json.dump(records, f, indent=1)
+    atomic_write_json(BENCH_JSON, records)
 
 
 def run() -> list:

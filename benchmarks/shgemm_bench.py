@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import row, time_jit
+from repro._atomic_io import atomic_write_json
 from repro.core.projection import fused_omega, project
 from repro.kernels import autotune, ops, ref
 from repro.kernels.shgemm_fused import hbm_bytes_modeled
@@ -197,8 +198,7 @@ def bench_json(sizes=((2048, 128, 2048), (1024, 64, 1024))) -> list:
             })
             rows.append(row(f"bench_json.{method}.{m}x{n}x{k}", us,
                             f"hbm_bytes={total};omega_bytes={omega_bytes}"))
-    with open(BENCH_JSON, "w") as f:
-        json.dump(records, f, indent=1)
+    atomic_write_json(BENCH_JSON, records)
     rows.append(row("bench_json.written", 0.0, BENCH_JSON))
     return rows
 
@@ -213,8 +213,7 @@ def _merge_bench_json(records, kinds) -> None:
                 old = [r for r in json.load(f) if r.get("kind") not in kinds]
         except (json.JSONDecodeError, OSError):
             old = []
-    with open(BENCH_JSON, "w") as f:
-        json.dump(old + records, f, indent=1)
+    atomic_write_json(BENCH_JSON, old + records)
 
 
 # SRHT vs Gaussian accuracy-parity tolerance (documented in DESIGN.md §17):

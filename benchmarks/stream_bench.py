@@ -34,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import row, time_jit
+from repro._atomic_io import atomic_write_json
 from repro import stream
 from repro.core import projection as proj
 from repro.core import rsvd
@@ -366,8 +367,8 @@ _RESIL_SCRIPT = textwrap.dedent("""
                              resume=True, return_report=True)
     np.savez(ckpt + "/result.npz", u=np.asarray(res.u),
              s=np.asarray(res.s), vt=np.asarray(res.vt))
-    with open(ckpt + "/report.json", "w") as f:
-        json.dump(rep.as_record(), f)
+    from repro._atomic_io import atomic_write_json
+    atomic_write_json(ckpt + "/report.json", rep.as_record())
 """)
 
 
@@ -514,8 +515,7 @@ def _merge_bench_json(records, kinds) -> None:
                        if r.get("kind") not in kinds]
         except (json.JSONDecodeError, OSError):
             old = []
-    with open(BENCH_JSON, "w") as f:
-        json.dump(old + records, f, indent=1)
+    atomic_write_json(BENCH_JSON, old + records)
 
 
 def run() -> list:
@@ -527,8 +527,7 @@ def run() -> list:
             + kv_serving_rows(records=records)
             + resilience_rows(records=records)
             + structured_kr_rows(records=records))
-    with open(BENCH_JSON, "w") as f:
-        json.dump(records, f, indent=1)
+    atomic_write_json(BENCH_JSON, records)
     rows.append(row("stream.bench_json.written", 0.0, BENCH_JSON))
     return rows
 

@@ -29,13 +29,14 @@ from typing import Callable, Optional
 __all__ = ["atomic_write_dir", "atomic_write_json", "AsyncWriter"]
 
 
-def atomic_write_json(path: str | Path, doc: dict, *, indent: int = 1) -> Path:
+def atomic_write_json(path: str | Path, doc: dict, *, indent: int = 1,
+                      sort_keys: bool = False) -> Path:
     """Atomically write ``doc`` as JSON: temp file in the same directory,
     then ``os.replace`` — readers see the old content or the new, never a
     torn write."""
     path = Path(path)
     tmp = path.with_name(path.name + ".tmp")
-    tmp.write_text(json.dumps(doc, indent=indent))
+    tmp.write_text(json.dumps(doc, indent=indent, sort_keys=sort_keys))
     os.replace(tmp, path)
     return path
 

@@ -1,0 +1,25 @@
+"""Contract-checker subsystem: jaxpr/Pallas static analysis + repo lint.
+
+Two engines behind one CLI (``python -m repro.analysis``):
+
+* **Traced-program passes** (`jaxpr_passes`, `pallas_audit`): structural
+  contracts checked against the jaxpr of real library entry points —
+  GEMM-freeness of structured applies, precision-lowering allowlists,
+  keyed-randomness/determinism, and BlockSpec/grid proofs for the Pallas
+  kernels (output-block disjointness, SMEM scalar shapes).
+* **AST lint** (`lint`): repo source conventions — atomic artifact IO,
+  seeded randomness, monotonic clocks, tracer-concretization hygiene,
+  no f64 in kernels.
+
+The repo's contract catalog lives in `contracts`; accepted findings in
+``analysis_baseline.json`` at the repo root.  DESIGN.md §18 documents the
+rule ids and how to add a checker.
+"""
+
+from repro.analysis.findings import Baseline, Finding, load_baseline
+from repro.analysis.jaxpr_passes import determinism, dtype_flow, no_gemm
+from repro.analysis.lint import lint_file, lint_paths
+from repro.analysis.pallas_audit import audit_pallas
+
+__all__ = ["Finding", "Baseline", "load_baseline", "no_gemm", "dtype_flow",
+           "determinism", "audit_pallas", "lint_file", "lint_paths"]

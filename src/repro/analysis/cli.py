@@ -1,0 +1,125 @@
+"""``python -m repro.analysis`` — run the contract checker over the repo.
+
+Default run = AST lint over the given paths (``src`` and ``benchmarks``
+when present) + the full jaxpr/Pallas contract catalog.  Exit 0 iff no
+finding survives the baseline.
+
+    python -m repro.analysis                       # lint + contracts
+    python -m repro.analysis src benchmarks        # explicit lint roots
+    python -m repro.analysis --baseline analysis_baseline.json
+    python -m repro.analysis --lint-only           # skip tracing (fast)
+    python -m repro.analysis --write-baseline b.json   # accept current set
+    python -m repro.analysis --list-rules
+
+When ``$GITHUB_STEP_SUMMARY`` is set (CI), a markdown rendering of the
+findings is appended there so the job summary shows the table directly.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+from repro.analysis import findings as F
+
+RULE_DOCS = {
+    "JAX-NO-GEMM": "dot_general/conv in a program contracted GEMM-free",
+    "JAX-DTYPE-CAST": "float downcast off the precision allowlist",
+    "JAX-F64": "float64 value produced on device",
+    "JAX-WEAK-PROMOTE": "weak-typed scalar mixes into a pinned float path",
+    "JAX-UNKEYED": "randomness not keyed by an entry-point input",
+    "JAX-NONDET": "backend-nondeterministic primitive (float scatter-add)",
+    "PL-WRITE-ALIAS": "two parallel grid steps write the same output block",
+    "PL-SMEM-SHAPE": "SMEM operand is not a (1, w) scalar",
+    "LINT-ATOMIC-IO": "JSON artifact written without _atomic_io",
+    "LINT-NP-RANDOM": "global/unseeded numpy randomness in library code",
+    "LINT-WALLCLOCK": "time.time() in library code",
+    "LINT-INT-TRACER": "bare int() concretization in jit-traced code",
+    "LINT-F64-LITERAL": "float64 literal in a kernel file",
+    "CONTRACT-ERROR": "a contract failed to trace (stale entry point)",
+}
+
+
+def _default_paths() -> list[str]:
+    out = []
+    for p in ("src/repro", "benchmarks"):
+        if Path(p).is_dir():
+            out.append(p)
+    return out
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="jaxpr/Pallas static analysis + repo lint")
+    ap.add_argument("paths", nargs="*", help="lint roots (default: "
+                    "src/repro and benchmarks under the cwd)")
+    ap.add_argument("--baseline", help="accepted-findings JSON; entries "
+                    "need a reason")
+    ap.add_argument("--write-baseline", metavar="PATH",
+                    help="write the current finding set as a baseline "
+                    "skeleton and exit 0")
+    ap.add_argument("--lint-only", action="store_true",
+                    help="skip the traced contracts (no jax import)")
+    ap.add_argument("--contracts-only", action="store_true",
+                    help="skip the AST lint")
+    ap.add_argument("--contract", action="append", dest="contracts",
+                    help="run only the named contract (repeatable)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule, doc in sorted(RULE_DOCS.items()):
+            print(f"{rule:<18} {doc}")
+        return 0
+
+    all_findings: list[F.Finding] = []
+
+    if not args.contracts_only:
+        from repro.analysis.lint import lint_paths
+        paths = args.paths or _default_paths()
+        if not paths:
+            print("no lint paths found (run from the repo root or pass "
+                  "paths)", file=sys.stderr)
+            return 2
+        all_findings.extend(lint_paths(paths))
+
+    if not args.lint_only:
+        from repro.analysis.contracts import run_repo_contracts
+        all_findings.extend(run_repo_contracts(args.contracts))
+
+    if args.write_baseline:
+        doc = F.baseline_doc(all_findings)
+        Path(args.write_baseline).write_text(json.dumps(doc, indent=1))
+        print(f"wrote {len(all_findings)} finding(s) to "
+              f"{args.write_baseline}; fill in every 'reason' before "
+              "checking it in")
+        return 0
+
+    baseline = F.load_baseline(args.baseline)
+    new, accepted = F.split_baselined(all_findings, baseline)
+    stale = baseline.stale_entries(all_findings) if baseline.entries else []
+
+    if args.format == "json":
+        print(json.dumps({
+            "new": [f.as_record() for f in new],
+            "baselined": [f.as_record() for f in accepted],
+            "stale_baseline_entries": stale,
+        }, indent=1))
+    else:
+        print(F.render_text(new, accepted=len(accepted), stale=stale))
+
+    summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary_path:
+        with open(summary_path, "a") as fh:
+            fh.write(F.render_markdown(new, accepted=len(accepted)))
+
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

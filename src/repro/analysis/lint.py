@@ -1,0 +1,304 @@
+"""AST lint over the repo: pluggable checkers for repo-wide source rules.
+
+Unlike the jaxpr passes (which check *traced programs*), these rules check
+*source text* — conventions the repo adopted after real incidents, where
+the dangerous pattern is visible syntactically:
+
+* ``LINT-ATOMIC-IO`` — JSON/bench/checkpoint artifacts must go through
+  ``repro._atomic_io`` (tmp-then-``os.replace``).  A raw
+  ``open(path, "w")`` + ``json.dump`` can be interrupted mid-write and
+  truncate a tracked artifact (BENCH_*.json, a trace, a manifest).
+* ``LINT-NP-RANDOM`` — no global-state numpy randomness
+  (``np.random.rand`` et al.) and no unseeded ``default_rng()`` in
+  library code; every draw must be reproducible from an explicit seed.
+* ``LINT-WALLCLOCK`` — no ``time.time()`` in library code: durations
+  must use the monotonic clocks (``perf_counter``); wall-clock
+  timestamps that *are* metadata belong in the baseline with a reason.
+* ``LINT-INT-TRACER`` — no bare ``int(x)`` concretization inside
+  jit-decorated functions or Pallas kernel files except through
+  ``stream.state._concrete_int`` (the repo's single tracer guard):
+  ``int(tracer)`` either crashes at trace time or silently freezes a
+  value that was meant to be dynamic.
+* ``LINT-F64-LITERAL`` — no float64 dtype literals in kernel files; the
+  MXU story is f32 accumulation over bf16/f16 operands, and f64 on a TPU
+  silently de-optimizes to software emulation.
+
+A checker is a function ``(path, tree, source_lines) -> list[Finding]``
+registered in ``CHECKERS``; adding a rule = adding a function (DESIGN.md
+§18 documents the workflow).
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Callable, Iterable
+
+from repro.analysis.findings import Finding
+
+__all__ = ["lint_paths", "lint_file", "CHECKERS"]
+
+Checker = Callable[[str, ast.AST, list[str]], list[Finding]]
+
+# module basenames exempt from the atomic-IO rule: the primitives themselves
+_ATOMIC_IO_EXEMPT = {"_atomic_io.py"}
+
+_NP_GLOBAL_FNS = {"rand", "randn", "randint", "random", "random_sample",
+                  "choice", "seed", "uniform", "normal", "standard_normal",
+                  "permutation", "shuffle", "exponential", "poisson"}
+
+_TIMING_OK = {"perf_counter", "monotonic", "process_time", "perf_counter_ns",
+              "monotonic_ns"}
+
+
+def _line(source_lines: list[str], lineno: int) -> str:
+    if 1 <= lineno <= len(source_lines):
+        return source_lines[lineno - 1].strip()
+    return ""
+
+
+def _finding(rule: str, path: str, node: ast.AST, source_lines: list[str],
+             message: str, hint: str) -> Finding:
+    return Finding(rule=rule, file=path, line=getattr(node, "lineno", 0),
+                   message=message, hint=hint,
+                   match=_line(source_lines, getattr(node, "lineno", 0)))
+
+
+def _dotted(node: ast.AST) -> str:
+    """'np.random.rand' for an Attribute chain, '' otherwise."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _mentions_json(node: ast.AST) -> bool:
+    """Heuristic: does this expression name a .json artifact?  String
+    constants ending in .json, or identifiers containing json/JSON."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Constant) and isinstance(sub.value, str) \
+                and sub.value.endswith(".json"):
+            return True
+        if isinstance(sub, ast.Name) and "json" in sub.id.lower():
+            return True
+        if isinstance(sub, ast.Attribute) and "json" in sub.attr.lower():
+            return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# checkers
+# ---------------------------------------------------------------------------
+
+def check_atomic_io(path: str, tree: ast.AST,
+                    source_lines: list[str]) -> list[Finding]:
+    if Path(path).name in _ATOMIC_IO_EXEMPT:
+        return []
+    out = []
+    hint = ("route the write through repro._atomic_io.atomic_write_json "
+            "(tmp-then-os.replace) so an interrupted run cannot truncate "
+            "the artifact")
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        dotted = _dotted(node.func)
+        # json.dump(doc, f) — the canonical torn-write shape
+        if dotted.endswith("json.dump"):
+            out.append(_finding(
+                "LINT-ATOMIC-IO", path, node, source_lines,
+                "json.dump to a raw file handle — a crash mid-write "
+                "truncates the artifact", hint))
+        # open(<something json>, "w")
+        elif dotted == "open" and node.args:
+            mode = ""
+            if len(node.args) > 1 and isinstance(node.args[1], ast.Constant):
+                mode = str(node.args[1].value)
+            for kw in node.keywords:
+                if kw.arg == "mode" and isinstance(kw.value, ast.Constant):
+                    mode = str(kw.value.value)
+            if "w" in mode and _mentions_json(node.args[0]):
+                out.append(_finding(
+                    "LINT-ATOMIC-IO", path, node, source_lines,
+                    "raw open(..., 'w') of a .json artifact", hint))
+        # path.write_text(json.dumps(...))
+        elif dotted.endswith("write_text") and node.args:
+            arg = node.args[0]
+            if isinstance(arg, ast.Call) \
+                    and _dotted(arg.func).endswith("json.dumps"):
+                out.append(_finding(
+                    "LINT-ATOMIC-IO", path, node, source_lines,
+                    "write_text(json.dumps(...)) — non-atomic JSON "
+                    "artifact write", hint))
+    return out
+
+
+def check_np_random(path: str, tree: ast.AST,
+                    source_lines: list[str]) -> list[Finding]:
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        dotted = _dotted(node.func)
+        head = dotted.rsplit(".", 1)[0]
+        if head in ("np.random", "numpy.random", "random") \
+                and dotted.split(".")[-1] in _NP_GLOBAL_FNS:
+            out.append(_finding(
+                "LINT-NP-RANDOM", path, node, source_lines,
+                f"global-state numpy randomness ({dotted}) in library code",
+                "use np.random.default_rng(seed) with an explicit seed (or "
+                "a jax key) so the draw is reproducible"))
+        elif dotted.endswith("default_rng") and not node.args \
+                and not node.keywords:
+            out.append(_finding(
+                "LINT-NP-RANDOM", path, node, source_lines,
+                "unseeded np.random.default_rng() — OS-entropy seeded, "
+                "unreproducible",
+                "pass an explicit seed"))
+    return out
+
+
+def check_wallclock(path: str, tree: ast.AST,
+                    source_lines: list[str]) -> list[Finding]:
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        dotted = _dotted(node.func)
+        if dotted == "time.time":
+            out.append(_finding(
+                "LINT-WALLCLOCK", path, node, source_lines,
+                "time.time() in library code — wall clock steps under NTP "
+                "and breaks duration math",
+                "use time.perf_counter() for durations; a deliberate "
+                "wall-clock *timestamp* (manifest metadata) goes in the "
+                "baseline with a reason"))
+    return out
+
+
+def _jit_decorated(fn_node: ast.AST) -> bool:
+    for dec in getattr(fn_node, "decorator_list", []):
+        txt = ast.dump(dec)
+        if "jit" in txt:
+            return True
+    return False
+
+
+_INT_SAFE_CALLS = {"len", "_concrete_int", "round", "ord"}
+
+
+def _int_arg_safe(arg: ast.AST) -> bool:
+    """int() arguments that cannot be tracers: literals, len()/round(),
+    shape accesses (static ints), env/string parses."""
+    if isinstance(arg, ast.Constant):
+        return True
+    if isinstance(arg, ast.Call):
+        name = _dotted(arg.func).split(".")[-1]
+        return name in _INT_SAFE_CALLS or name.startswith("get")
+    for sub in ast.walk(arg):
+        if isinstance(sub, ast.Attribute) and sub.attr in ("shape", "ndim",
+                                                           "size",
+                                                           "itemsize"):
+            return True
+    if isinstance(arg, ast.BinOp):
+        return all(_int_arg_safe(s) for s in (arg.left, arg.right))
+    return False
+
+
+def check_int_tracer(path: str, tree: ast.AST,
+                     source_lines: list[str]) -> list[Finding]:
+    """Bare int() concretization inside jit-traced code.  Scope: functions
+    decorated with jax.jit (where every array argument is a tracer); the
+    Pallas kernel files get the same treatment for any function."""
+    out = []
+    kernel_file = "kernels" in Path(path).parts
+
+    def scan_fn(fn_node):
+        for node in ast.walk(fn_node):
+            if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                    and node.func.id == "int" and node.args \
+                    and not _int_arg_safe(node.args[0]):
+                out.append(_finding(
+                    "LINT-INT-TRACER", path, node, source_lines,
+                    f"bare int(...) inside jit-traced {fn_node.name} — "
+                    "concretizes (or crashes on) a tracer",
+                    "use stream.state._concrete_int for may-be-traced "
+                    "values, or hoist the conversion outside the jit "
+                    "boundary"))
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if _jit_decorated(node) or (kernel_file
+                                        and node.name.endswith("_kernel")):
+                scan_fn(node)
+    return out
+
+
+def check_f64_literal(path: str, tree: ast.AST,
+                      source_lines: list[str]) -> list[Finding]:
+    if "kernels" not in Path(path).parts:
+        return []
+    out = []
+    for node in ast.walk(tree):
+        bad = None
+        if isinstance(node, ast.Attribute) and node.attr == "float64":
+            bad = _dotted(node)
+        elif isinstance(node, ast.Constant) and node.value == "float64":
+            bad = "'float64'"
+        if bad:
+            out.append(_finding(
+                "LINT-F64-LITERAL", path, node, source_lines,
+                f"float64 literal ({bad}) in a kernel file",
+                "kernels accumulate in f32 over bf16/f16 operands "
+                "(DESIGN.md §2); f64 on device is emulated and always "
+                "an accident — host-side math.* is the sanctioned f64"))
+    return out
+
+
+CHECKERS: dict[str, Checker] = {
+    "LINT-ATOMIC-IO": check_atomic_io,
+    "LINT-NP-RANDOM": check_np_random,
+    "LINT-WALLCLOCK": check_wallclock,
+    "LINT-INT-TRACER": check_int_tracer,
+    "LINT-F64-LITERAL": check_f64_literal,
+}
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def lint_file(path: str | Path, *, root: str | Path | None = None,
+              checkers: Iterable[str] | None = None) -> list[Finding]:
+    path = Path(path)
+    rel = str(path if root is None else path.relative_to(root))
+    source = path.read_text()
+    try:
+        tree = ast.parse(source, filename=str(path))
+    except SyntaxError as e:
+        return [Finding(rule="LINT-SYNTAX", file=rel, line=e.lineno or 0,
+                        message=f"file does not parse: {e.msg}",
+                        hint="fix the syntax error", match="")]
+    lines = source.splitlines()
+    out: list[Finding] = []
+    for name, checker in CHECKERS.items():
+        if checkers is not None and name not in checkers:
+            continue
+        out.extend(checker(rel, tree, lines))
+    return out
+
+
+def lint_paths(paths: Iterable[str | Path], *,
+               root: str | Path | None = None,
+               checkers: Iterable[str] | None = None) -> list[Finding]:
+    """Lint every ``*.py`` under each path (files accepted directly)."""
+    out: list[Finding] = []
+    for p in paths:
+        p = Path(p)
+        files = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        for f in files:
+            out.extend(lint_file(f, root=root, checkers=checkers))
+    return out

@@ -19,6 +19,8 @@ from pathlib import Path
 
 import numpy as np
 
+from repro._atomic_io import atomic_write_json
+
 
 @dataclasses.dataclass
 class SyntheticLM:
@@ -173,11 +175,7 @@ def write_shard_manifest(dirpath: str | Path,
         rows += int(shape[0])
     doc = {"format": "repro-shard-manifest", "version": 1,
            "shape": [rows, *[int(s) for s in trailing]], "shards": shards}
-    mpath = dirpath / "manifest.json"
-    tmp = mpath.with_suffix(".json.tmp")
-    tmp.write_text(json.dumps(doc, indent=1))
-    tmp.replace(mpath)
-    return mpath
+    return atomic_write_json(dirpath / "manifest.json", doc)
 
 
 def shard_row_ranges(dirpath: str | Path) -> list[tuple[str, int, int]]:

@@ -44,6 +44,7 @@ from typing import Callable, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro._atomic_io import atomic_write_json
 from repro.kernels import shgemm as _k
 
 # Sweep space: MXU-aligned tilings from one (128, 128, 128) tile up to the
@@ -124,10 +125,7 @@ def _lookup(key: str, mode: str) -> dict | None:
 
 def _save_cache(path: str, cache: dict) -> None:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    tmp = path + ".tmp"
-    with open(tmp, "w") as f:
-        json.dump(cache, f, indent=1, sort_keys=True)
-    os.replace(tmp, path)
+    atomic_write_json(path, cache, sort_keys=True)
 
 
 def cache_key(m: int, n: int, k: int, b_dtype, terms: int,

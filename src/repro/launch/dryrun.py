@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro._atomic_io import atomic_write_json
 from repro.configs.base import ALL_SHAPES, shapes_for
 from repro.launch import mesh as mesh_mod
 from repro.models import registry as R
@@ -189,7 +190,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     act_sharding.set_mesh(mesh, tp=rules.tp_enabled(cfg))
     act_sharding.set_param_specs(raw_pspecs)
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     if shape.kind == "train":
         mb = micro_override or pick_micro_batches(cfg, shape, mesh)
         step = R.make_train_step(cfg, micro_batches=mb)
@@ -207,9 +208,9 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                 else R.make_serve_step(cfg))
         jitted = jax.jit(step, in_shardings=(pspecs, bspecs))
         lowered = jitted.lower(abs_params, specs)
-    t_lower = time.time() - t0
+    t_lower = time.perf_counter() - t0
     compiled = lowered.compile()
-    t_compile = time.time() - t0 - t_lower
+    t_compile = time.perf_counter() - t0 - t_lower
     act_sharding.set_mesh(None)  # probe lowers unsharded
     act_sharding.set_param_specs(None)
 
@@ -293,7 +294,7 @@ def main():
         print(f"=== {arch} x {sh} x {mesh_name} ===", flush=True)
         try:
             row = lower_cell(arch, sh, mp, micro_override=args.micro)
-            path.write_text(json.dumps(row, indent=1))
+            atomic_write_json(path, row)
             print(f"  ok: flops={row['flops']:.3e} "
                   f"coll={sum(row['collective_bytes'].values()):.3e}B "
                   f"compile={row['compile_s']}s", flush=True)

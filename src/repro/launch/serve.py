@@ -30,6 +30,7 @@ import time
 
 import jax
 
+from repro._atomic_io import atomic_write_json
 from repro.configs.base import smoke_config
 from repro.models import registry as R
 from repro.models import transformer as T
@@ -72,9 +73,9 @@ def run_scheduler(args, cfg) -> None:
                                  "arrival_rate": args.arrival_rate})
         log.info("trace saved to %s (replay with --load-trace)",
                  args.save_trace)
-    t0 = time.time()
+    t0 = time.perf_counter()
     sch.run(trace)
-    wall = time.time() - t0
+    wall = time.perf_counter() - t0
     summary = sch.metrics.summary(expected=len(trace))
     log.info("drained in %.2fs wall; admission cap %d streams "
              "(stream bound %d B%s)", wall, sch.max_streams,
@@ -83,17 +84,16 @@ def run_scheduler(args, cfg) -> None:
     print("SLO summary (virtual-clock):")
     print(format_slo_table(summary))
     if args.report:
-        with open(args.report, "w") as f:
-            json.dump({"config": {"arch": cfg.name, "slots": args.slots,
-                                  "max_seq": args.max_seq,
-                                  "kv_rank": args.kv_rank,
-                                  "kv_compress_ratio":
-                                      args.kv_compress_ratio,
-                                  "hbm_budget": args.hbm_budget,
-                                  "max_streams": sch.max_streams,
-                                  "prefill_chunk": args.prefill_chunk,
-                                  "max_queue": args.max_queue},
-                       "wall_s": wall, "summary": summary}, f, indent=1)
+        atomic_write_json(args.report, {
+            "config": {"arch": cfg.name, "slots": args.slots,
+                       "max_seq": args.max_seq,
+                       "kv_rank": args.kv_rank,
+                       "kv_compress_ratio": args.kv_compress_ratio,
+                       "hbm_budget": args.hbm_budget,
+                       "max_streams": sch.max_streams,
+                       "prefill_chunk": args.prefill_chunk,
+                       "max_queue": args.max_queue},
+            "wall_s": wall, "summary": summary})
         log.info("report written to %s", args.report)
 
 
@@ -108,7 +108,7 @@ def run_engine(args, cfg) -> None:
                   jax.random.randint(k, (4,), 0, cfg.vocab)]
         eng.submit(Request(rid=i, prompt=prompt, max_new=args.max_new))
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     steps = 0
     while eng.queue or any(eng.active):
         n = eng.step()
@@ -116,7 +116,7 @@ def run_engine(args, cfg) -> None:
         if steps % 10 == 0:
             log.info("step %d: %d active, %d queued", steps, n,
                      len(eng.queue))
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     total = args.requests * args.max_new
     log.info("served %d requests / %d tokens in %.2fs (%.1f tok/s)",
              args.requests, total, dt, total / dt)

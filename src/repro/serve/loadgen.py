@@ -24,6 +24,8 @@ from typing import Optional
 
 import numpy as np
 
+from repro._atomic_io import atomic_write_json
+
 
 @dataclasses.dataclass
 class TraceRequest:
@@ -76,8 +78,7 @@ def save_trace(trace: list[TraceRequest], path: str,
         "meta": meta or {},
         "requests": [dataclasses.asdict(r) for r in trace],
     }
-    with open(path, "w") as f:
-        json.dump(payload, f)
+    atomic_write_json(path, payload, indent=0)
 
 
 def load_trace(path: str) -> list[TraceRequest]:

@@ -120,21 +120,23 @@ class ServeMetrics:
     # -- lifecycle events --------------------------------------------------
     def on_submit(self, rid: int, now: float, prompt_len: int,
                   max_new: int) -> None:
+        now = float(now)
         if self._t0 is None:
             self._t0 = now
-        self.records[rid] = RequestRecord(rid=rid, submit_s=now,
-                                          prompt_len=prompt_len,
-                                          max_new=max_new)
+        self.records[rid] = RequestRecord(rid=int(rid), submit_s=now,
+                                          prompt_len=int(prompt_len),
+                                          max_new=int(max_new))
 
     def on_reject(self, rid: int, now: float, queue_depth: int) -> None:
-        self.rejected.append({"rid": rid, "t_s": now,
-                              "queue_depth": queue_depth})
+        self.rejected.append({"rid": int(rid), "t_s": float(now),
+                              "queue_depth": int(queue_depth)})
 
     def on_admit(self, rid: int, now: float) -> None:
-        self.records[rid].admit_s = now
+        self.records[rid].admit_s = float(now)
 
     def on_token(self, rid: int, now: float) -> None:
         rec = self.records[rid]
+        now = float(now)
         if rec.first_token_s is None:
             rec.first_token_s = now
         rec.n_out += 1
@@ -143,18 +145,19 @@ class ServeMetrics:
     def on_finish(self, rid: int, now: float, *,
                   evicted: bool = False) -> None:
         rec = self.records[rid]
+        now = float(now)
         rec.finish_s = now
         rec.evicted = evicted
         self._t_end = max(self._t_end, now)
 
     def sample(self, queue_depth: int, concurrency: int,
                hbm: Optional[dict] = None) -> None:
-        self.queue_depth_samples.append(queue_depth)
-        self.concurrency_samples.append(concurrency)
+        self.queue_depth_samples.append(int(queue_depth))
+        self.concurrency_samples.append(int(concurrency))
         if hbm is not None:
-            self.hbm_samples.append({"dense_bytes": hbm["dense_bytes"],
+            self.hbm_samples.append({"dense_bytes": int(hbm["dense_bytes"]),
                                      "compressed_bytes":
-                                         hbm["compressed_bytes"]})
+                                         int(hbm["compressed_bytes"])})
 
     # -- rollups -----------------------------------------------------------
     def accounting(self, expected: Optional[int] = None) -> dict:

@@ -450,13 +450,13 @@ class SketchJobCheckpointer:
             "attempt": self._log["attempts"],
             "phase": phase, "pass_idx": int(pass_idx),
             "tiles_done": int(tiles_done), "rows_done": int(rows_done),
-            "tiles_processed": self._tiles_processed,
-            "tile_secs_total": self._tile_secs,
+            "tiles_processed": int(self._tiles_processed),
+            "tile_secs_total": float(self._tile_secs),
             # conservatively measured against the last ENQUEUED checkpoint
             # (the write is async): a crash between enqueue and fsync
             # slightly overestimates the loss, never under
-            "tile_secs_since_ckpt": self._tile_secs_since_ckpt,
-            "elapsed": time.perf_counter() - self._t0,
+            "tile_secs_since_ckpt": float(self._tile_secs_since_ckpt),
+            "elapsed": float(time.perf_counter() - self._t0),
         }, indent=0)
 
     # -- finish ------------------------------------------------------------
@@ -472,14 +472,14 @@ class SketchJobCheckpointer:
         return ResilienceReport(
             attempts=int(self._log["attempts"]),
             tiles_total=int(tiles_total),
-            tiles_processed=(self._log["tiles_prev"]
-                             + self._tiles_processed),
+            tiles_processed=int(self._log["tiles_prev"]
+                                + self._tiles_processed),
             tiles_recomputed=sum(int(e.get("tiles_lost", 0))
                                  for e in events),
-            useful_tile_seconds=useful,
-            wall_tile_seconds=wall_tile,
+            useful_tile_seconds=float(useful),
+            wall_tile_seconds=float(wall_tile),
             goodput=(useful / wall_tile) if wall_tile > 0 else 1.0,
-            wall_seconds=(self._log["wall_seconds_prev"]
+            wall_seconds=float(self._log["wall_seconds_prev"]
                           + time.perf_counter() - self._t0),
             recovery_events=list(events))
 

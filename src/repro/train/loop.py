@@ -82,7 +82,7 @@ def train(step_fn: Callable, params, opt_state, data, cfg: LoopConfig, *,
     try:
         while state.step < cfg.total_steps and not state.interrupted:
             batch = data.batch(state.step)
-            t0 = time.time()
+            t0 = time.perf_counter()
             for attempt in range(cfg.max_retries + 1):
                 try:
                     params, opt_state, metrics = step_fn(params, opt_state,
@@ -101,7 +101,7 @@ def train(step_fn: Callable, params, opt_state, data, cfg: LoopConfig, *,
                         state.step = last
                         log.error("rolled back to checkpoint step %d", last)
                         break
-            dt = time.time() - t0
+            dt = time.perf_counter() - t0
 
             # straggler watch
             if len(state.step_times) >= 10:

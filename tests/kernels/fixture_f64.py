@@ -1,0 +1,11 @@
+"""LINT-F64-LITERAL fixture: a float64 literal in a kernel-scoped file.
+
+Lives under a ``kernels/`` directory on purpose — the rule only applies
+there.  Not importable by CI lint scope; see tests/test_analysis.py.
+"""
+
+import jax.numpy as jnp
+
+
+def bad_f64_accumulator(a):
+    return a.astype(jnp.float64)

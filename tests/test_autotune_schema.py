@@ -1,0 +1,133 @@
+"""Schema validation for the shipped autotune cache
+(src/repro/kernels/autotune_default.json).
+
+The shipped defaults are hand-curated, so nothing but this test stops a
+typo'd key from silently never matching (the lookup would fall back to the
+heuristic with no error).  Every key must parse under the two cache-key
+grammars, round-trip through ``cache_key``/``decode_cache_key``, carry
+``mode: "shipped"`` and a platform consistent with its key, and hold
+block values the kernels can actually serve.
+"""
+
+import json
+import re
+from pathlib import Path
+
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import autotune as at
+from repro.kernels import shgemm as _k
+
+DOC = json.loads(Path(at.default_cache_path()).read_text())
+
+# {backend}:{m}x{n}x{k}:{dtype}:t{terms}:{mat|fused}
+GEMM_KEY = re.compile(
+    r"^(?P<backend>[a-z]+):(?P<m>\d+)x(?P<n>\d+)x(?P<k>\d+):"
+    r"(?P<dtype>bfloat16|float16):t(?P<terms>\d+):(?P<variant>mat|fused)$")
+# {backend}:fdec:s{S}:g{G}:hd{hd}:r{r}
+FDEC_KEY = re.compile(
+    r"^(?P<backend>[a-z]+):fdec:s(?P<s>\d+):g(?P<g>\d+):"
+    r"hd(?P<hd>\d+):r(?P<r>\d+)$")
+
+
+def _parsed():
+    for key, entry in DOC.items():
+        m = GEMM_KEY.match(key) or FDEC_KEY.match(key)
+        yield key, entry, m
+
+
+def test_cache_is_nonempty_and_covers_both_families():
+    assert any(GEMM_KEY.match(k) for k in DOC)
+    assert any(FDEC_KEY.match(k) for k in DOC)
+
+
+def test_every_key_matches_a_grammar():
+    bad = [k for k, _, m in _parsed() if m is None]
+    assert bad == [], f"unparseable shipped cache keys: {bad}"
+
+
+def test_gemm_keys_roundtrip_through_cache_key():
+    for key, _, m in _parsed():
+        if m.re is not GEMM_KEY:
+            continue
+        g = m.groupdict()
+        rebuilt = at.cache_key(int(g["m"]), int(g["n"]), int(g["k"]),
+                               jnp.dtype(g["dtype"]), int(g["terms"]),
+                               g["variant"] == "fused", backend=g["backend"])
+        assert rebuilt == key
+
+
+def test_fdec_keys_roundtrip_through_decode_cache_key():
+    for key, _, m in _parsed():
+        if m.re is not FDEC_KEY:
+            continue
+        g = m.groupdict()
+        rebuilt = at.decode_cache_key(int(g["s"]), int(g["g"]),
+                                      int(g["hd"]), int(g["r"]),
+                                      backend=g["backend"])
+        assert rebuilt == key
+
+
+def test_entries_are_shipped_mode_with_matching_platform():
+    for key, entry, m in _parsed():
+        assert entry["mode"] == "shipped", key
+        assert entry["platform"] == m.group("backend"), key
+        # shipped entries must be servable to compiled (real-backend) runs —
+        # that is their whole purpose
+        assert at._entry_usable(entry, "compiled"), key
+        assert at._entry_usable(entry, "interpret"), key
+
+
+def test_gemm_blocks_are_valid_candidates_within_vmem():
+    budget = int(at.VMEM_LIMIT * at.VMEM_BUDGET_FRACTION)
+    for key, entry, m in _parsed():
+        if m.re is not GEMM_KEY:
+            continue
+        blocks = tuple(entry["blocks"])
+        # curated entries need not come from the sweep list, but must keep
+        # the MXU tile alignment the kernel assumes
+        bm, bn, bk = blocks
+        assert bm % 8 == 0 and bn % 128 == 0 and bk % 128 == 0, key
+        g = m.groupdict()
+        fused = g["variant"] == "fused"
+        assert _k.vmem_bytes(*blocks, jnp.dtype(g["dtype"]),
+                             fused=fused) <= budget, key
+        # a shipped block must not exceed the padded problem dims
+        assert bm <= max(at._round_up(int(g["m"]), 8), 128), key
+        assert bn <= at._round_up(int(g["n"]), 128), key
+        assert bk <= at._round_up(int(g["k"]), 128), key
+
+
+def test_fdec_blocks_are_valid_candidates():
+    for key, entry, m in _parsed():
+        if m.re is not FDEC_KEY:
+            continue
+        assert entry["block_kv"] in at.DECODE_CANDIDATES, key
+        assert entry["block_kv"] <= at._round_up(int(m.group("s")), 128), key
+
+
+def test_shipped_entries_served_by_pick_functions(tmp_path, monkeypatch):
+    """End to end: with an empty user cache and the shipped platform, the
+    pick_* entry points serve the shipped blocks to a compiled run."""
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "none.json"))
+    for key, entry, m in _parsed():
+        monkeypatch.setattr(jax, "default_backend",
+                            lambda b=m.group("backend"): b)
+        g = m.groupdict()
+        if m.re is GEMM_KEY:
+            got = at.pick_blocks(int(g["m"]), int(g["n"]), int(g["k"]),
+                                 b_dtype=jnp.dtype(g["dtype"]),
+                                 terms=int(g["terms"]),
+                                 fused=g["variant"] == "fused",
+                                 interpret=False)
+            assert got == tuple(entry["blocks"]), key
+        else:
+            got = at.pick_decode_block(int(g["s"]), int(g["g"]),
+                                       int(g["hd"]), int(g["r"]),
+                                       interpret=False)
+            expect = min(int(entry["block_kv"]),
+                         max(8, at._round_up(int(g["s"]), 8)))
+            assert got == expect, key
